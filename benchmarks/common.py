@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: dataset/partition caching, CSV emission."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@functools.lru_cache(maxsize=32)
+def fed_setup(dataset: str, scale: int, n_clients: int, alpha_key: str, seed: int = 0):
+    """Cached (graph, federated partition). alpha_key: 'iid' or str(alpha)."""
+    from repro.graph.data import make_dataset
+    from repro.federated.partition import partition_graph
+
+    alpha = None if alpha_key == "iid" else float(alpha_key)
+    g = make_dataset(dataset, scale=scale, seed=seed)
+    fed = partition_graph(g, n_clients, alpha=alpha, seed=seed)
+    return g, fed
+
+
+def save_rows(name: str, rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def emit_csv(name: str, rows: list[dict]) -> None:
+    """Print 'benchmark,key=value,...' lines — the harness contract."""
+    for row in rows:
+        parts = ",".join(f"{k}={_fmt(v)}" for k, v in row.items())
+        print(f"{name},{parts}")
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """us_per_call for jit'd callables (post-warmup)."""
+    import jax
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6

@@ -1,0 +1,26 @@
+"""Paper Fig. 5 ablation: FedAll vs FedAIS1 (importance only) vs FedAIS2
+(adaptive sync only) vs full FedAIS."""
+from __future__ import annotations
+
+from repro.federated.baselines import method_config
+from repro.federated.simulator import run_federated
+from benchmarks.common import fed_setup
+
+ABLATIONS = ("fedall", "fedais1", "fedais2", "fedais")
+
+
+def run(quick: bool = True) -> list[dict]:
+    g, fed = fed_setup("coauthor", 32 if quick else 64, 16, "iid")
+    rounds = 12 if quick else 40
+    rows = []
+    for m in ABLATIONS:
+        res = run_federated(g, fed, method_config(m, tau0=4), rounds=rounds,
+                            clients_per_round=5, seed=0)
+        rows.append({
+            "method": m,
+            "final_acc": round(res.final["acc"] * 100, 2),
+            "comm_mb": round(res.final["comm_total_bytes"] / 1e6, 2),
+            "embed_comm_mb": round(res.final["comm_embed_bytes"] / 1e6, 2),
+            "sync_events": res.final["sync_events"],
+        })
+    return rows

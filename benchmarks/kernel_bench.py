@@ -1,0 +1,58 @@
+"""Kernel-layer microbenchmarks: us_per_call of the XLA reference paths on
+CPU (the Pallas kernels target TPU; interpret-mode timing is not meaningful,
+so what we time here is the jnp oracle each kernel must beat on-device) plus
+allclose deltas kernel-vs-oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spmm.ops import block_spmm
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def run(quick: bool = True) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # spmm oracle timing + kernel correctness
+    n, m, d = (256, 256, 128) if quick else (1024, 1024, 256)
+    a = jnp.asarray((rng.random((n, m)) < 0.05) * rng.random((n, m)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    ref = jax.jit(spmm_ref)
+    us = timed(ref, a, x)
+    err = float(jnp.max(jnp.abs(block_spmm(a, x) - ref(a, x))))
+    rows.append({"kernel": "spmm", "shape": f"{n}x{m}x{d}",
+                 "oracle_us_per_call": round(us, 1), "kernel_max_err": err})
+
+    # flash attention
+    B, S, H, Hkv, hd = (1, 256, 4, 2, 64) if quick else (2, 1024, 8, 2, 64)
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)), jnp.float32)
+    ref = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = timed(ref, q, k, v)
+    err = float(jnp.max(jnp.abs(flash_attention(q, k, v, block_q=64, block_k=64)
+                                - ref(q, k, v))))
+    rows.append({"kernel": "flash_attention", "shape": f"B{B}S{S}H{H}kv{Hkv}",
+                 "oracle_us_per_call": round(us, 1), "kernel_max_err": err})
+
+    # wkv6
+    B, T, H, N = (1, 128, 4, 32) if quick else (2, 512, 8, 64)
+    r_, k_, v_ = [jnp.asarray(rng.standard_normal((B, T, H, N)) * 0.5, jnp.float32)
+                  for _ in range(3)]
+    w_ = jnp.asarray(np.exp(-np.exp(rng.standard_normal((B, T, H, N)))), jnp.float32)
+    u_ = jnp.asarray(rng.standard_normal((H, N)) * 0.1, jnp.float32)
+    ref = jax.jit(lambda *args: wkv6_ref(*args)[0])
+    us = timed(ref, r_, k_, v_, w_, u_)
+    err = float(jnp.max(jnp.abs(wkv6(r_, k_, v_, w_, u_, chunk=32)[0]
+                                - ref(r_, k_, v_, w_, u_))))
+    rows.append({"kernel": "wkv6", "shape": f"B{B}T{T}H{H}N{N}",
+                 "oracle_us_per_call": round(us, 1), "kernel_max_err": err})
+    return rows

@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run JSONs (§Roofline deliverable): per
+(arch x shape x mesh), the three terms, the dominant bottleneck, and the
+useful-FLOPs ratio. Reads benchmarks/results/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_dryrun(pattern: str = "*") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"{pattern}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    raws = load_dryrun()
+    rows = []
+    for r in raws:
+        if r.get("status") == "skipped":
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": "skipped",
+            })
+            continue
+        if r.get("status") != "ok":
+            rows.append({
+                "arch": r.get("arch"), "shape": r.get("shape"), "mesh": r.get("mesh"),
+                "status": "error",
+            })
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_ms": round(rf["compute_s"] * 1e3, 3),
+            "memory_ms": round(rf["memory_s"] * 1e3, 3),
+            "collective_ms": round(rf["collective_s"] * 1e3, 3),
+            "dominant": rf["dominant"],
+            "useful_flops_ratio": round(rf["useful_flops_ratio"], 3),
+            "mfu_upper_pct": round(rf["mfu_upper_bound"] * 100, 2),
+            "temp_gb_per_device": round((r["memory"]["temp_bytes"] or 0) / 2**30, 2),
+        })
+    if not rows:
+        rows.append({"status": "no dryrun results found — run repro.launch.dryrun first"})
+    return rows

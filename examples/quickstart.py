@@ -1,0 +1,40 @@
+"""Quickstart: FedAIS vs FedAll on a synthetic Pubmed-like graph.
+
+Runs the paper's Algorithm 1 end to end on CPU in ~1 minute and prints the
+accuracy / communication trade-off the paper is about.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.federated.baselines import method_config
+from repro.federated.partition import partition_graph
+from repro.federated.simulator import run_federated
+from repro.graph.data import make_dataset
+
+
+def main():
+    # 1. a synthetic stand-in for Pubmed (Table 1 statistics, 1/32 scale)
+    graph = make_dataset("pubmed", scale=32, seed=0)
+    print(f"graph: {graph.n_nodes} nodes, {len(graph.edges)} edges, "
+          f"{graph.n_classes} classes")
+
+    # 2. intra-graph federated partition: 16 clients, Dirichlet(0.5) non-iid
+    fed = partition_graph(graph, n_clients=16, alpha=0.5, seed=0)
+    print(f"partition: {fed.n_clients} clients, n_max={fed.n_max}, "
+          f"cross-client edges={fed.n_cross_edges}")
+
+    # 3. train with FedAIS (importance sampling + adaptive sync) and FedAll
+    for method in ("fedais", "fedall"):
+        mcfg = method_config(method, tau0=4 if method == "fedais" else 1)
+        res = run_federated(graph, fed, mcfg, rounds=10, clients_per_round=5,
+                            seed=0, verbose=False)
+        f = res.final
+        print(f"{method:8s} acc={f['acc']*100:5.1f}%  f1={f['f1']*100:5.1f}%  "
+              f"comm={f['comm_total_bytes']/1e6:7.1f} MB "
+              f"(embeddings {f['comm_embed_bytes']/1e6:6.1f} MB)  "
+              f"est. wall-clock={f['wall_clock_s']:.1f}s")
+    print("\nFedAIS should match or beat FedAll's accuracy at a fraction of "
+          "the embedding-synchronization traffic (paper Fig. 3/4).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched LM serving: prefill + KV-cache decode (the serve_step the decode
+dry-run shapes lower), on the reduced config of any assigned architecture.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mini
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b   # O(1)-state decode
+"""
+import argparse
+
+from repro.configs import list_archs
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mini", choices=["mini", *list_archs()])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    args.seed = 0
+    serve(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""FedAIS scheduling applied to a transformer LM (the paper -> LM bridge).
+
+Trains the bundled ~100M-class ``mini`` dense LM with federated local SGD
+where (a) client batches are chosen by loss-delta importance (Eq. 7-8) and
+(b) the sync interval follows the adaptive Eq. 11 rule. This is the
+end-to-end training driver deliverable (a few hundred steps on CPU).
+
+    PYTHONPATH=src python examples/train_lm_federated.py --steps 120
+"""
+import argparse
+
+from repro.launch.train import train, train_federated
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--clients", type=int, default=4)
+    args = ap.parse_args()
+
+    class A:  # argparse shim reused by launch.train
+        arch = "mini"
+        steps = args.steps
+        batch = args.batch
+        seq_len = args.seq_len
+        lr = 3e-4
+        seed = 0
+        log_every = 20
+        ckpt_dir = None
+        ckpt_every = 10_000
+        clients = args.clients
+        tau0 = 4
+
+    print("=== centralized baseline ===")
+    base = train(A)
+    print("\n=== FedAIS-scheduled federated ===")
+    fed = train_federated(A)
+    print(f"\ncentralized: {base['first_loss']:.3f} -> {base['final_loss']:.3f}")
+    print(f"federated  : {fed['first_loss']:.3f} -> {fed['final_loss']:.3f} "
+          f"({fed['sync_events']} model syncs)")
+
+
+if __name__ == "__main__":
+    main()

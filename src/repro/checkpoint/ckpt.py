@@ -1,0 +1,71 @@
+"""Msgpack-based pytree checkpointing (no orbax/flax in container).
+
+Layout: ``<dir>/step_<n>.msgpack`` — a flat map from '/'-joined key paths to
+(dtype, shape, raw bytes) triples, plus a '__treedef__' structural record so
+arbitrary pytrees of dict/list/tuple/namedtuple round-trip.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    payload = {
+        k: {"dtype": str(v.dtype), "shape": list(v.shape), "data": v.tobytes()}
+        for k, v in flat.items()
+    }
+    path = os.path.join(directory, f"step_{step:08d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic
+    return path
+
+
+def load_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    path = os.path.join(directory, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat_like, treedef = _flatten_with_paths(like)
+    leaves = []
+    for key, template in flat_like.items():
+        if key not in payload:
+            raise KeyError(f"checkpoint {path} missing key {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(template.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != template {template.shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for fname in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)\.msgpack", fname))
+    ]
+    return max(steps) if steps else None

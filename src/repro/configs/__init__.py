@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ModelConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+    long_context_variant,
+    register,
+    smoke_variant,
+)
+from repro.configs.shapes import INPUT_SHAPES, InputShape, input_specs, shape_applicable
+
+__all__ = [
+    "ModelConfig",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+    "register",
+    "smoke_variant",
+    "INPUT_SHAPES",
+    "InputShape",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,282 @@
+"""Model configuration schema + registry for the assigned architectures.
+
+Every architecture in the assignment pool is expressed as a ``ModelConfig``.
+``block_pattern`` is the repeating unit of block kinds; ``n_layers`` need not
+be divisible by the unit length (the remainder is applied as a trailing
+partial unit — layer counts stay exact, see DESIGN.md §6.4).
+
+Block kinds:
+    "attn"    full (causal) self-attention + FFN
+    "local"   sliding-window self-attention + FFN
+    "rec"     RG-LRU recurrent block (Griffin) + FFN
+    "rwkv"    RWKV6 time-mix + channel-mix
+    "enc"     bidirectional encoder attention + FFN (whisper encoder)
+    "dec"     causal self-attn + cross-attn + FFN (whisper decoder)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    source: str = ""                  # citation from the assignment pool
+
+    # -- attention / block layout --
+    block_pattern: tuple = ("attn",)
+    window_size: int = 4096           # sliding window for "local" blocks
+    rope_theta: float = 10000.0
+    pos_embedding: str = "rope"       # rope | learned | none
+    max_seq_len: int = 131072
+
+    # -- MLP --
+    activation: str = "silu"          # silu | gelu | sqrelu | relu
+    gated_mlp: bool = True
+
+    # -- MoE --
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    dense_ff_dim: int = 0             # hidden dim of the parallel dense FFN
+    # "sort": global argsort dispatch (paper-faithful gather/scatter port —
+    # the baseline). "einsum": group-wise one-hot dispatch that SPMD
+    # partitions cleanly (the §Perf hillclimb winner; see EXPERIMENTS.md).
+    moe_impl: str = "sort"
+    # routing-group length for the einsum dispatch. Dispatch-einsum FLOPs
+    # scale with group² (C ∝ group), so smaller groups cut the one-hot
+    # matmul cost quadratically at slightly higher drop variance (§Perf H1.2).
+    moe_group_size: int = 0           # 0 -> one group per sequence
+
+    # -- SSM / hybrid --
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 0               # >0: chunked WKV w/ boundary remat (§Perf H2.2)
+    rglru_width: int = 0              # 0 -> d_model
+    conv1d_width: int = 4
+    rglru_c: float = 8.0
+
+    # -- encoder-decoder (whisper) --
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 1500       # stub mel/conv frame embeddings
+
+    # -- VLM --
+    n_image_tokens: int = 0           # stub projected patch embeddings
+
+    # -- numerics / impl --
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attn_impl: str = "einsum"         # einsum | chunked  (chunked = blockwise, lower HBM)
+    attn_chunk_size: int = 1024
+    remat: bool = False               # activation checkpointing over blocks
+    # scan over stacked layer units (compact HLO) vs python-unrolled layers.
+    # The dry-run unrolls so cost_analysis / collective parsing sees every
+    # layer (XLA counts a while-loop body once, not x trip count).
+    scan_layers: bool = True
+    # long_500k support: when True, "attn" blocks degrade to sliding window in
+    # the long-context decode path (documented beyond-paper variant).
+    long_context_local: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def remainder_pattern(self) -> tuple:
+        rem = self.n_layers % len(self.block_pattern)
+        return self.block_pattern[:rem]
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k in ("rwkv",) for k in self.block_pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True iff no block requires *full* attention over the sequence."""
+        kinds = set(self.block_pattern) | set(self.remainder_pattern)
+        if kinds <= {"rwkv", "rec", "local"}:
+            return True
+        if kinds <= {"rwkv", "rec", "local", "attn"} and self.long_context_local:
+            return True
+        return False
+
+    @property
+    def has_decode(self) -> bool:
+        """Encoder-only models have no decode step (none assigned here)."""
+        return True
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        qd, kvd = self.q_dim, self.kv_dim
+        per_kind: dict[str, int] = {}
+        attn_p = d * qd + 2 * d * kvd + qd * d + d  # q,k,v,o + norm
+        ffn_dense = d * ff * (3 if self.gated_mlp else 2) + d
+        if self.n_experts:
+            ffn_moe = d * self.n_experts + self.n_experts * d * ff * (3 if self.gated_mlp else 2) + d
+            if self.moe_dense_residual:
+                dff = self.dense_ff_dim or ff
+                ffn_moe += d * dff * (3 if self.gated_mlp else 2)
+            ffn = ffn_moe
+        else:
+            ffn = ffn_dense
+        per_kind["attn"] = attn_p + ffn
+        per_kind["local"] = attn_p + ffn
+        per_kind["enc"] = attn_p + ffn
+        per_kind["dec"] = attn_p + (d * qd + 2 * d * kvd + qd * d + d) + ffn
+        w = self.rglru_width or d
+        per_kind["rec"] = (
+            2 * d * w                      # rec/gate branch in-projections
+            + w * self.conv1d_width + w    # depthwise conv + bias
+            + 2 * w * w + 2 * w + w        # RG-LRU gates (w_a, w_i, biases, Lambda)
+            + w * d                        # out projection
+            + d * ff * 3 + 2 * d           # gated MLP + norms
+        )
+        # time-mix (r,k,v,g,o projections + ddlerp/decay loras + bonus) +
+        # channel-mix (wck, wcv, wcr) + norms/mix vectors
+        per_kind["rwkv"] = (
+            5 * d * d                      # wr, wk, wv, wg, wo
+            + 5 * (d * 32 + 32 * d)        # ddlerp lora (mix_w1/mix_w2)
+            + d * 64 + 64 * d              # decay lora
+            + d * ff + ff * d + d * d      # channel mix
+            + 10 * d                       # mu vectors, w0, u, ln scales
+        )
+        total = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        pattern = list(self.block_pattern) * self.n_units + list(self.remainder_pattern)
+        for kind in pattern:
+            total += per_kind[kind]
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * (attn_p + ffn_dense)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        n_ffn_mats = 3 if self.gated_mlp else 2
+        inactive = (self.n_experts - self.top_k) * d * ff * n_ffn_mats
+        n_moe_layers = sum(
+            1 for k in (list(self.block_pattern) * self.n_units + list(self.remainder_pattern))
+            if k in ("attn", "local")
+        )
+        return int(self.param_count() - n_moe_layers * inactive)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str, config_fn: Callable[[], ModelConfig], smoke_fn: Callable[[], ModelConfig]):
+    _REGISTRY[arch_id] = config_fn
+    _SMOKE_REGISTRY[arch_id] = smoke_fn
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE_REGISTRY[arch_id]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    # import the per-arch modules for their registration side effects
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        gemma3_12b, dbrx_132b, deepseek_67b, nemotron_4_15b, llama3_405b,
+        arctic_480b, whisper_large_v3, rwkv6_1_6b, recurrentgemma_2b,
+        internvl2_2b,
+    )
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Beyond-paper long-context decode variant: full-attention blocks degrade
+    to sliding-window so the 500k cache stays sub-quadratic (used only for the
+    ``long_500k`` shape when ``cfg.long_context_local``; DESIGN.md §5)."""
+    if not cfg.long_context_local:
+        return cfg
+    pattern = tuple("local" if k == "attn" else k for k in cfg.block_pattern)
+    return replace(cfg, block_pattern=pattern)
+
+
+def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced config of the same family: 2 layers, d_model<=512, <=4 experts."""
+    pattern = cfg.block_pattern
+    d = min(cfg.d_model, 256)
+    hd = 32
+    n_heads = 4
+    n_kv = min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0
+    kw = dict(
+        n_layers=max(2, len(pattern[:2])) if len(pattern) > 1 else 2,
+        d_model=d,
+        n_heads=n_heads if cfg.n_heads else 0,
+        n_kv_heads=n_kv,
+        head_dim=hd,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 1024),
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        # no-drop capacity so tiny-batch decode routes identically to prefill
+        capacity_factor=8.0 if cfg.n_experts else cfg.capacity_factor,
+        dense_ff_dim=min(cfg.dense_ff_dim, 256) if cfg.dense_ff_dim else 0,
+        rwkv_head_dim=32,
+        rglru_width=min(cfg.rglru_width, 256) if cfg.rglru_width else 0,
+        n_encoder_layers=2 if cfg.n_encoder_layers else 0,
+        encoder_seq_len=16 if cfg.n_encoder_layers else cfg.encoder_seq_len,
+        n_image_tokens=8 if cfg.n_image_tokens else 0,
+        window_size=min(cfg.window_size, 8),
+        max_seq_len=128,
+        attn_chunk_size=16,
+        dtype="float32",
+    )
+    # keep the *family pattern*: 2 layers drawn from the same repeating unit
+    kw["block_pattern"] = tuple(pattern[:2]) if len(pattern) >= 2 else pattern
+    kw["n_layers"] = 2
+    kw.update(overrides)
+    return replace(cfg, **kw)

@@ -1,0 +1,89 @@
+"""The four assigned input shapes + ShapeDtypeStruct builders for the dry-run.
+
+Decode shapes lower ``serve_step`` — ONE new token against a KV cache / recurrent
+state of ``seq_len`` — not ``train_step``. ``long_500k`` requires sub-quadratic
+attention; applicability is decided by ``shape_applicable`` (skips recorded in
+DESIGN.md / EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg, shape: InputShape) -> tuple[bool, str]:
+    """(runs?, reason-if-skip)."""
+    if shape.name == "long_500k":
+        if not cfg.supports_long_context:
+            return False, (
+                f"{cfg.arch_id}: pure full-attention family — 500k decode would need "
+                "a quadratic-cost full cache; skipped per assignment rules"
+            )
+    if shape.kind == "decode" and not cfg.has_decode:
+        return False, f"{cfg.arch_id}: encoder-only, no decode step"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model *data* input of the step.
+
+    train:   {tokens (B,S) i32, labels (B,S) i32 [, image_embeds, enc_frames]}
+    prefill: {tokens (B,S) i32 [, image_embeds, enc_frames]}
+    decode:  {tokens (B,1) i32, pos () i32}  (the state is built by the caller
+             via jax.eval_shape over init_decode_state)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.jnp_dtype
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+    else:  # decode
+        specs = {"tokens": _sds((B, 1), jnp.int32), "pos": _sds((), jnp.int32)}
+    if cfg.n_image_tokens and shape.kind != "decode":
+        specs["image_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_model), dt)
+    if cfg.n_encoder_layers and shape.kind != "decode":
+        specs["enc_frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model), dt)
+    return specs
+
+
+def concrete_inputs(cfg, shape: InputShape, key=None) -> dict:
+    """Small-scale concrete inputs for smoke tests (use with smoke configs)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size, jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size, jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(ks[0], (B, 1), 0, cfg.vocab_size, jnp.int32)
+        out["pos"] = jnp.asarray(S - 1, jnp.int32)
+    if cfg.n_image_tokens and shape.kind != "decode":
+        out["image_embeds"] = jax.random.normal(ks[2], (B, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype) * 0.02
+    if cfg.n_encoder_layers and shape.kind != "decode":
+        out["enc_frames"] = jax.random.normal(ks[3], (B, cfg.encoder_seq_len, cfg.d_model), cfg.jnp_dtype) * 0.02
+    return out

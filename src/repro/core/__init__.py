@@ -1,0 +1,24 @@
+"""FedAIS core: the paper's contribution as composable JAX modules.
+
+    importance.py   adaptive importance-based sampling       (Eq. 7-8)
+    historical.py   historical embedding store + staleness   (Eq. 6)
+    sync.py         adaptive embedding synchronization       (Eq. 9-11)
+    variance.py     variance decomposition diagnostics       (Eq. 3-5, Thm. 1)
+    fedais.py       Algorithm 1 — the composed trainer
+"""
+from repro.core.importance import importance_probs, loss_delta_scores, sample_batch
+from repro.core.sync import adaptive_tau, delay_model, tau_theoretical
+from repro.core.historical import HistoricalState, init_historical, push_embeddings, staleness_metrics
+
+__all__ = [
+    "importance_probs",
+    "loss_delta_scores",
+    "sample_batch",
+    "adaptive_tau",
+    "delay_model",
+    "tau_theoretical",
+    "HistoricalState",
+    "init_historical",
+    "push_embeddings",
+    "staleness_metrics",
+]

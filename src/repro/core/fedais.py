@@ -1,0 +1,173 @@
+"""FedAIS Algorithm 1 — the client LocalUpdate and its method-space.
+
+One ``MethodConfig`` describes every method in the paper (FedAIS, its
+ablations FedAIS1/FedAIS2, and the five baselines) as feature toggles over
+the same LocalUpdate, so cost/accuracy comparisons are apples-to-apples.
+
+``make_local_update(mcfg, dims)`` returns a jit-compiled function running J
+local epochs for ONE client: importance-sampled batches (Eq. 7-8), forward
+with historical embeddings (Eq. 6), local Adam steps, historical pushes, and
+ghost pulls every tau epochs. It is vmapped over the selected clients by the
+simulator — the cross-client pull then lowers to a gather over the stacked
+client axis (the all-to-all of the real deployment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.historical import pull_ghosts, push_embeddings
+from repro.core.importance import importance_probs, loss_delta_scores, sample_batch, uniform_probs
+from repro.models.gcn import gcn_batch_forward, per_node_loss
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class MethodConfig:
+    name: str = "fedais"
+    importance_sampling: bool = True     # FedAIS / FedAIS1 (off: uniform/all)
+    adaptive_sync: bool = True           # FedAIS / FedAIS2 (off: fixed tau)
+    use_all_samples: bool = False        # FedAll/FedPNS/FedGraph/FedSage+/FedAIS2
+    sample_ratio: float = 0.7            # r: fraction of local nodes per epoch
+    neighbor_fanout: int = 10            # max sampled neighbors per node
+    tau0: int = 2                        # initial / fixed sync interval
+    local_epochs: int = 4                # J
+    lr: float = 0.01
+    use_generator: bool = False          # FedSage+: impute ghosts, no sync
+    bandit_fanout: bool = False          # FedGraph-lite: learned fanout
+    use_ghosts: bool = True              # FedLocal ablation: ignore cross-client
+    batch_cap: int = 256                 # padded batch size upper bound
+
+
+def batch_size_for(mcfg: MethodConfig, n_max: int) -> int:
+    if mcfg.use_all_samples:
+        return n_max
+    return max(1, min(mcfg.batch_cap, int(round(n_max * mcfg.sample_ratio))))
+
+
+def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
+    """Build the jit-able LocalUpdate for one client (Algorithm 1 lines 10-19)."""
+    bsz = batch_size_for(mcfg, n_max)
+
+    def local_update(
+        params: Any,                # global model from server
+        client: dict,               # this client's stacked-slice arrays
+        feats_all: jnp.ndarray,     # (K, n_max, F) — ghost pull source
+        hist1_all: jnp.ndarray,     # (K, n_tot, H1) — ghost pull source (snapshot)
+        hist1: jnp.ndarray,         # (n_tot, H1) this client's table
+        age: jnp.ndarray,           # (n_tot,)
+        ghost_feat: jnp.ndarray,    # (g_max, F) current synced ghost features
+        prev_loss: jnp.ndarray,     # (n_max,) loss at previous round (-1 = never)
+        tau: jnp.ndarray,           # scalar int32 — current sync interval
+        fanout: jnp.ndarray,        # scalar int32 — neighbor fanout (bandit-controllable)
+        epoch_offset: jnp.ndarray,  # scalar int32 — global batch-epoch counter (t*J)
+        key: jnp.ndarray,
+    ):
+        train_mask = client["train_mask"] * client["node_mask"]
+
+        # ---- lines 11-12: loss pass + selection probabilities ----
+        all_idx = jnp.arange(n_max)
+        logits_all, _, _ = gcn_batch_forward(
+            params, client["features"], ghost_feat, hist1,
+            client["nbr_idx"], client["nbr_mask"], all_idx,
+        )
+        loss_all = per_node_loss(logits_all, client["labels"]) * client["node_mask"]
+        if mcfg.importance_sampling:
+            scores = loss_delta_scores(loss_all, prev_loss, train_mask)
+            probs = importance_probs(scores, train_mask)
+        else:
+            probs = uniform_probs(train_mask)
+
+        opt_state = adamw_init(params)
+        n_sync = jnp.zeros((), jnp.int32)
+        n_ghost_pulled = jnp.zeros((), jnp.float32)
+
+        def epoch(carry, j):
+            params, opt_state, hist1, age, ghost_feat, n_sync, n_pulled, key = carry
+            key, k_batch, k_nbr = jax.random.split(key, 3)
+
+            # ---- line 14: batch selection ----
+            if mcfg.use_all_samples:
+                batch_idx = all_idx
+                valid = train_mask > 0
+            else:
+                batch_idx, valid = sample_batch(k_batch, probs, bsz, train_mask)
+
+            # ---- neighbor fanout subsampling ----
+            b_nbr_mask = client["nbr_mask"][batch_idx]
+            ranks = jax.random.uniform(k_nbr, b_nbr_mask.shape)
+            ranks = jnp.where(b_nbr_mask > 0, ranks, 2.0)
+            order = jnp.argsort(ranks, axis=-1).argsort(axis=-1)   # rank of each slot
+            keep = (order < fanout).astype(jnp.float32)
+            if not mcfg.use_ghosts:
+                keep = keep * (client["nbr_idx"][batch_idx] < n_max)
+
+            # ---- lines 15-17: sync every tau epochs (pull ghosts) ----
+            # j is the GLOBAL batch-epoch counter (Algorithm 1: the paper's j
+            # runs over local batch training epochs; tau gates it across
+            # rounds — round 0 epoch 0 always syncs as the warm-up).
+            # Only the ghosts the current batch actually references are
+            # transferred ("the selected cross-client neighbor embeddings",
+            # Algorithm 1 line 16) — importance sampling thus directly
+            # shrinks the communication volume.
+            j_global = epoch_offset + j
+            do_sync = ((j_global % jnp.maximum(tau, 1)) == 0) & jnp.asarray(
+                mcfg.use_ghosts and not mcfg.use_generator)
+
+            b_idx_rows = client["nbr_idx"][batch_idx]
+            referenced = (b_idx_rows >= n_max) & (b_nbr_mask * keep > 0) & valid[:, None]
+            slot = jnp.where(referenced, b_idx_rows - n_max, 0)
+            need = jnp.zeros((g_max,), jnp.float32).at[slot.reshape(-1)].max(
+                referenced.reshape(-1).astype(jnp.float32))
+            need = need * client["ghost_mask"]
+
+            def pull(_):
+                gf, gh = pull_ghosts(hist1_all, feats_all,
+                                     client["ghost_owner"], client["ghost_row"],
+                                     client["ghost_mask"])
+                new_ghost_feat = jnp.where(need[:, None] > 0, gf, ghost_feat)
+                new_hist = hist1.at[n_max:].set(
+                    jnp.where(need[:, None] > 0, gh, hist1[n_max:]))
+                return new_ghost_feat, new_hist, n_sync + 1, n_pulled + need.sum()
+
+            def nopull(_):
+                return ghost_feat, hist1, n_sync, n_pulled
+
+            ghost_feat, hist1, n_sync, n_pulled = jax.lax.cond(do_sync, pull, nopull, None)
+
+            # ---- line 18: batch forward/backward + local step ----
+            def batch_loss(p):
+                logits, h1, _ = gcn_batch_forward(
+                    p, client["features"], ghost_feat, hist1,
+                    client["nbr_idx"], client["nbr_mask"], batch_idx, nbr_keep=keep,
+                )
+                w = valid.astype(jnp.float32) * train_mask[batch_idx]
+                nll = per_node_loss(logits, client["labels"][batch_idx])
+                return (nll * w).sum() / jnp.maximum(w.sum(), 1.0), h1
+
+            (loss, h1), grads = jax.value_and_grad(batch_loss, has_aux=True)(params)
+            params, opt_state = adamw_update(grads, opt_state, params, mcfg.lr)
+
+            # ---- historical push of fresh in-batch embeddings ----
+            hist1, age = push_embeddings(hist1, age, batch_idx, h1,
+                                         valid & (client["node_mask"][batch_idx] > 0))
+            return (params, opt_state, hist1, age, ghost_feat, n_sync, n_pulled, key), loss
+
+        carry = (params, opt_state, hist1, age, ghost_feat, n_sync, n_ghost_pulled, key)
+        carry, epoch_losses = jax.lax.scan(epoch, carry, jnp.arange(mcfg.local_epochs))
+        params, opt_state, hist1, age, ghost_feat, n_sync, n_ghost_pulled, key = carry
+
+        stats = {
+            "loss_all": loss_all,                 # becomes prev_loss next round
+            "epoch_losses": epoch_losses,
+            "n_sync": n_sync,
+            "n_ghost_pulled": n_ghost_pulled,
+            "mean_importance_entropy": -jnp.sum(
+                jnp.where(probs > 0, probs * jnp.log(jnp.maximum(probs, 1e-30)), 0.0)),
+        }
+        return params, hist1, age, ghost_feat, stats
+
+    return local_update

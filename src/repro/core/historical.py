@@ -1,0 +1,67 @@
+"""Historical embedding store (paper Eq. 6) — device-resident HBM tables.
+
+Per client: layer-0 ghost features (synced cross-client raw inputs) and a
+layer-1 table over [own | ghost] rows. In-batch rows are refreshed by the
+client itself after each local step ("push"); ghost rows refresh only at
+synchronization epochs ("pull" from the owner's table). Staleness counters
+feed the Theorem-1 style diagnostics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class HistoricalState(NamedTuple):
+    ghost_feat: jnp.ndarray   # (K, g_max, F)   layer-0 cross-client features
+    hist1: jnp.ndarray        # (K, n_max + g_max, H1)
+    age: jnp.ndarray          # (K, n_max + g_max) int32 epochs since refresh
+
+
+def init_historical(n_clients: int, n_max: int, g_max: int, n_feat: int, h1: int) -> HistoricalState:
+    return HistoricalState(
+        ghost_feat=jnp.zeros((n_clients, g_max, n_feat), jnp.float32),
+        hist1=jnp.zeros((n_clients, n_max + g_max, h1), jnp.float32),
+        age=jnp.zeros((n_clients, n_max + g_max), jnp.int32),
+    )
+
+
+def push_embeddings(hist1: jnp.ndarray, age: jnp.ndarray, batch_idx: jnp.ndarray,
+                    values: jnp.ndarray, valid: jnp.ndarray):
+    """Client-side push of freshly computed in-batch embeddings (one client).
+
+    hist1 (n_tot, H1); batch_idx (b,); values (b, H1); valid (b,) bool.
+    """
+    vals = jnp.where(valid[:, None], values, hist1[batch_idx])
+    hist1 = hist1.at[batch_idx].set(vals)
+    age = (age + 1).at[batch_idx].set(jnp.where(valid, 0, age[batch_idx] + 1))
+    return hist1, age
+
+
+def pull_ghosts(
+    hist1_all: jnp.ndarray,     # (K, n_tot, H1) all clients' tables (snapshot)
+    feats_all: jnp.ndarray,     # (K, n_max, F) all clients' features
+    ghost_owner: jnp.ndarray,   # (g_max,) this client's ghost owners
+    ghost_row: jnp.ndarray,     # (g_max,)
+    ghost_mask: jnp.ndarray,    # (g_max,)
+):
+    """Cross-client embedding synchronization for one client: fetch the
+    owners' current layer-1 embeddings and layer-0 features for every ghost.
+    Returns (ghost_feat (g,F), ghost_h1 (g,H1)). In the real deployment this
+    is the network transfer; the simulator charges its bytes to the cost
+    meter and (on TPU) it lowers to a gather across the client mesh axis."""
+    owner = jnp.maximum(ghost_owner, 0)
+    gf = feats_all[owner, ghost_row] * ghost_mask[:, None]
+    gh = hist1_all[owner, ghost_row] * ghost_mask[:, None]
+    return gf, gh
+
+
+def staleness_metrics(age: jnp.ndarray, node_mask: jnp.ndarray) -> dict:
+    m = node_mask > 0
+    a = jnp.where(m, age, 0)
+    return {
+        "mean_age": a.sum() / jnp.maximum(m.sum(), 1),
+        "max_age": a.max(),
+    }

@@ -1,0 +1,57 @@
+"""Adaptive importance-based sampling (paper Eq. 7-8).
+
+The optimal per-node sampling probability minimising gradient variance
+(Eq. 7) is p_v ∝ ||∇f_v||, but that needs n_k per-sample gradients per epoch.
+The paper's O(n_k) proxy: the loss *difference* between two consecutive local
+model updates, Δ_j = f(θ_{j+1}) - f(θ_j) per node, with
+p_v = ||Δ_j|| / Σ ||Δ_j|| (Eq. 8). One forward pass per update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def loss_delta_scores(loss_curr: jnp.ndarray, loss_prev: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """|Δ_j| per node, masked. Nodes never seen (prev < 0 sentinel) fall back
+    to their current loss so cold-start nodes are still sampled."""
+    delta = jnp.abs(loss_curr - loss_prev)
+    cold = loss_prev < 0.0
+    scores = jnp.where(cold, jnp.abs(loss_curr), delta)
+    return scores * mask
+
+
+def importance_probs(scores: jnp.ndarray, mask: jnp.ndarray, *, floor: float = 1e-8) -> jnp.ndarray:
+    """Normalise scores into selection probabilities (Eq. 8).
+
+    A tiny uniform floor keeps every training node reachable (unbiasedness of
+    importance sampling needs p_v > 0; also avoids 0/0 on fresh clients).
+    """
+    s = scores * mask + floor * mask
+    total = jnp.maximum(s.sum(), 1e-30)
+    return s / total
+
+
+def sample_batch(key, probs: jnp.ndarray, batch_size: int, mask: jnp.ndarray):
+    """Sample ``batch_size`` distinct node indices with P(v) ∝ probs.
+
+    Gumbel-top-k gives distinct draws proportional to probs without
+    materialising the full categorical-without-replacement chain; masked
+    entries can never win. Returns (idx (b,), valid (b,)).
+    """
+    logp = jnp.log(jnp.maximum(probs, 1e-30)) + jnp.where(mask > 0, 0.0, -1e30)
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, probs.shape, minval=1e-20, maxval=1.0)))
+    _, idx = jax.lax.top_k(logp + g, batch_size)
+    valid = mask[idx] > 0   # clients smaller than batch_size yield padded picks
+    return idx, valid
+
+
+def uniform_probs(mask: jnp.ndarray) -> jnp.ndarray:
+    return mask / jnp.maximum(mask.sum(), 1.0)
+
+
+def sampling_variance(probs: jnp.ndarray, grad_norms: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """The Eq. (7) objective: Σ ||∇f_v||² / p_v over valid nodes — the
+    quantity importance sampling minimises. Used by tests/diagnostics."""
+    p = jnp.maximum(probs, 1e-30)
+    return jnp.sum(mask * jnp.square(grad_norms) / p)

@@ -1,0 +1,1 @@
+"""Federated runtime: intra-graph partition, clients, server, baselines."""

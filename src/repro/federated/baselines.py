@@ -1,0 +1,159 @@
+"""The paper's five comparison baselines + FedAIS ablations as MethodConfigs.
+
+All methods share the same LocalUpdate machinery (core/fedais.py) with
+feature toggles, so the cost/accuracy axes are directly comparable:
+
+    FedAll     all local samples, random neighbor selection, sync every epoch
+    FedRandom  random sample batches + random neighbors, sync every epoch
+    FedSage+   all samples; ghost features *generated* locally (no embed sync,
+               generator params ride the model up/down-link)  [lite variant,
+               DESIGN.md §6.3]
+    FedPNS     all samples, fixed periodic sync (tau = 2)
+    FedGraph   all samples, bandit-learned neighbor fanout    [lite variant,
+               DESIGN.md §6.2]
+    FedLocal   within-client neighbors only (Fig. 1 reference)
+    FedAIS1    importance sampling only (fixed tau)
+    FedAIS2    all samples + adaptive sync only
+    FedAIS     the full method
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedais import MethodConfig
+
+FANOUT_ACTIONS = (2, 5, 10, 32)
+
+
+def method_config(name: str, **overrides) -> MethodConfig:
+    presets = {
+        "fedall": dict(importance_sampling=False, adaptive_sync=False,
+                       use_all_samples=True, tau0=1),
+        "fedrandom": dict(importance_sampling=False, adaptive_sync=False,
+                          use_all_samples=False, tau0=1),
+        "fedsage+": dict(importance_sampling=False, adaptive_sync=False,
+                         use_all_samples=True, tau0=1, use_generator=True),
+        "fedpns": dict(importance_sampling=False, adaptive_sync=False,
+                       use_all_samples=True, tau0=2),
+        "fedgraph": dict(importance_sampling=False, adaptive_sync=False,
+                         use_all_samples=True, tau0=1, bandit_fanout=True),
+        "fedlocal": dict(importance_sampling=False, adaptive_sync=False,
+                         use_all_samples=True, tau0=1, use_ghosts=False),
+        "fedais1": dict(importance_sampling=True, adaptive_sync=False),
+        "fedais2": dict(importance_sampling=False, adaptive_sync=True,
+                        use_all_samples=True),
+        "fedais": dict(importance_sampling=True, adaptive_sync=True),
+    }
+    if name not in presets:
+        raise KeyError(f"unknown method {name!r}; known: {sorted(presets)}")
+    kw = dict(presets[name])
+    kw.update(overrides)
+    return MethodConfig(name=name, **kw)
+
+
+ALL_BASELINES = ("fedall", "fedrandom", "fedsage+", "fedpns", "fedgraph")
+
+
+# ---------------------------------------------------------------------------
+# FedSage+ lite: local ghost-feature generator
+# ---------------------------------------------------------------------------
+
+def ghost_reverse_map(fed, max_rev: int = 8):
+    """(K, g_max, R) own-rows adjacent to each ghost + mask — the structural
+    context the generator conditions on."""
+    K, n_max, D = fed.nbr_idx.shape
+    g_max = fed.g_max
+    rev = np.zeros((K, g_max, max_rev), np.int32)
+    rev_mask = np.zeros((K, g_max, max_rev), np.float32)
+    fill = np.zeros((K, g_max), np.int32)
+    for k in range(K):
+        rows, slots = np.where(fed.nbr_idx[k] >= n_max)
+        for r, s_col in zip(rows, slots):
+            if fed.nbr_mask[k, r, s_col] == 0:
+                continue
+            s = fed.nbr_idx[k, r, s_col] - n_max
+            if fill[k, s] < max_rev:
+                rev[k, s, fill[k, s]] = r
+                rev_mask[k, s, fill[k, s]] = 1.0
+                fill[k, s] += 1
+    return rev, rev_mask
+
+
+def generator_init(key, n_feat: int, hidden: int = 64):
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / (n_feat + hidden)) ** 0.5
+    s2 = (2.0 / (hidden + n_feat)) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (n_feat, hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, n_feat), jnp.float32) * s2,
+        "b2": jnp.zeros((n_feat,), jnp.float32),
+    }
+
+
+def generator_apply(gp, ctx):
+    """Refine a neighborhood-mean context vector into a feature estimate."""
+    h = jax.nn.relu(ctx @ gp["w1"] + gp["b1"])
+    return ctx + h @ gp["w2"] + gp["b2"]      # residual refinement
+
+
+def generator_train_step(gp, feats, nbr_idx, nbr_mask, node_mask, lr=1e-2):
+    """Self-supervised: reconstruct own features from own neighborhood mean
+    (that is exactly the task the generator performs for ghosts)."""
+
+    def loss_fn(gp):
+        own = nbr_mask * (nbr_idx < feats.shape[0])
+        gathered = feats[jnp.minimum(nbr_idx, feats.shape[0] - 1)] * own[..., None]
+        deg = jnp.maximum(own.sum(-1, keepdims=True), 1.0)
+        ctx = gathered.sum(1) / deg
+        pred = generator_apply(gp, ctx)
+        err = jnp.square(pred - feats).sum(-1) * node_mask
+        return err.sum() / jnp.maximum(node_mask.sum(), 1.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(gp)
+    gp = jax.tree_util.tree_map(lambda p, g: p - lr * g, gp, grads)
+    return gp, loss
+
+
+def generator_impute(gp, feats, rev, rev_mask, ghost_mask):
+    """Predict ghost features from reverse-neighborhood means (one client)."""
+    gathered = feats[rev] * rev_mask[..., None]
+    deg = jnp.maximum(rev_mask.sum(-1, keepdims=True), 1.0)
+    ctx = gathered.sum(1) / deg
+    return generator_apply(gp, ctx) * ghost_mask[:, None]
+
+
+def generator_param_count(n_feat: int, hidden: int = 64) -> int:
+    return n_feat * hidden + hidden + hidden * n_feat + n_feat
+
+
+# ---------------------------------------------------------------------------
+# FedGraph lite: epsilon-greedy fanout bandit
+# ---------------------------------------------------------------------------
+
+class FanoutBandit:
+    """Per-client epsilon-greedy bandit over neighbor-fanout actions; reward
+    is the per-round local-loss improvement (the DRL policy of FedGraph
+    collapsed to its decision variable; DESIGN.md §6.2)."""
+
+    def __init__(self, n_clients: int, seed: int = 0, eps: float = 0.2):
+        self.q = np.zeros((n_clients, len(FANOUT_ACTIONS)), np.float64)
+        self.n = np.zeros((n_clients, len(FANOUT_ACTIONS)), np.int64)
+        self.rng = np.random.default_rng(seed)
+        self.eps = eps
+        self.last_action = np.zeros(n_clients, np.int64)
+
+    def choose(self, k: int) -> int:
+        if self.rng.random() < self.eps or self.n[k].sum() == 0:
+            a = self.rng.integers(len(FANOUT_ACTIONS))
+        else:
+            a = int(np.argmax(self.q[k]))
+        self.last_action[k] = a
+        return FANOUT_ACTIONS[a]
+
+    def update(self, k: int, reward: float) -> None:
+        a = self.last_action[k]
+        self.n[k, a] += 1
+        self.q[k, a] += (reward - self.q[k, a]) / self.n[k, a]

@@ -1,0 +1,66 @@
+"""Communication / computation cost meters + the paper's delay model.
+
+Everything is counted analytically (bytes of what crosses the network,
+FLOPs of what runs on clients) so iid/non-iid/scale sweeps are exact and
+deterministic — matching how the paper reports Fig. 3/4 cost axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+BYTES_F32 = 4
+
+
+@dataclass
+class CostMeter:
+    comm_model_bytes: float = 0.0      # model up/down-link
+    comm_embed_bytes: float = 0.0      # cross-client embedding sync
+    compute_flops: float = 0.0
+    wall_clock_s: float = 0.0
+    sync_events: int = 0
+
+    @property
+    def comm_total_bytes(self) -> float:
+        return self.comm_model_bytes + self.comm_embed_bytes
+
+    def add(self, other: "CostMeter") -> None:
+        self.comm_model_bytes += other.comm_model_bytes
+        self.comm_embed_bytes += other.comm_embed_bytes
+        self.compute_flops += other.compute_flops
+        self.wall_clock_s += other.wall_clock_s
+        self.sync_events += other.sync_events
+
+    def snapshot(self) -> dict:
+        return {
+            "comm_model_bytes": self.comm_model_bytes,
+            "comm_embed_bytes": self.comm_embed_bytes,
+            "comm_total_bytes": self.comm_total_bytes,
+            "compute_flops": self.compute_flops,
+            "wall_clock_s": self.wall_clock_s,
+            "sync_events": self.sync_events,
+        }
+
+
+@dataclass(frozen=True)
+class DelayModel:
+    """Client compute speed + network bandwidth for the wall-clock estimate
+    (paper's c and o). Defaults roughly a commodity edge client."""
+
+    client_flops_per_s: float = 50e9     # 50 GFLOP/s effective
+    bandwidth_bytes_per_s: float = 12.5e6  # 100 Mbit/s
+    latency_s: float = 0.05
+
+    def compute_time(self, flops: float) -> float:
+        return flops / self.client_flops_per_s
+
+    def comm_time(self, bytes_: float) -> float:
+        return self.latency_s + bytes_ / self.bandwidth_bytes_per_s
+
+
+def model_bytes(n_params: int) -> float:
+    return n_params * BYTES_F32
+
+
+def embed_sync_bytes(n_ghosts: float, dims: tuple[int, ...]) -> float:
+    """One synchronization event: per ghost, one embedding per layer."""
+    return float(n_ghosts) * sum(dims) * BYTES_F32

@@ -1,0 +1,1 @@
+"""Graph substrate: synthetic datasets, padded adjacency, centralized samplers."""

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package has three modules:
+    <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py     — jit'd public wrapper (padding, reshapes, GQA mapping)
+    ref.py     — pure-jnp oracle used by the allclose/hypothesis test sweeps
+
+Kernels:
+    spmm            blocked block-sparse neighbor aggregation (the FedGCN hot
+                    spot — the paper's gather/scatter re-blocked for the MXU)
+    flash_attention causal/sliding-window GQA attention, online softmax
+    wkv6            RWKV6 linear recurrence, state resident in VMEM
+
+Kernels are validated in ``interpret=True`` mode on CPU; on-device they
+compile for TPU. The LM/GCN default paths use XLA einsum implementations —
+kernels are opt-in via ``use_pallas`` flags (CPU dry-runs must not trace
+pallas_call bodies for 512 fake devices).
+"""

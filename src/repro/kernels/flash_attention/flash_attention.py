@@ -1,0 +1,140 @@
+"""Flash attention Pallas kernel: causal / sliding-window, GQA-aware.
+
+Online-softmax blockwise attention (Dao et al.) re-tiled for TPU VMEM: the
+(block_q x head_dim) query tile and running (m, l, acc) statistics stay in
+VMEM scratch across the sequential kv-block grid dimension; each step is one
+MXU (bq x hd)@(hd x bk) matmul plus VPU rescaling. Fully-masked kv blocks
+(above the causal diagonal / outside the sliding window) are skipped with
+``pl.when`` so local attention costs O(S * window) not O(S^2).
+
+GQA is handled in the BlockSpec index maps: query head h reads kv head
+h // (H // Hkv) — no materialised repeat of K/V in HBM.
+
+Layouts: q (BH, S, hd); k, v (BHkv, S, hd). Grid (BH, nq, nk), kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_q: int, block_k: int, n_kv: int, seq_len: int, window: int | None,
+    causal: bool, scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block skip: run the block only if any (q, k) pair in it is unmasked
+    if causal:
+        live = k_start <= q_start + block_q - 1
+        if window is not None:
+            live = live & (k_start + block_k - 1 >= q_start - window + 1)
+    else:
+        live = jnp.bool_(True)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                        # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < seq_len                             # mask key padding
+        if causal:
+            ok &= k_pos <= q_pos
+            if window is not None:
+                ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret", "n_q_heads", "seq_len"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,   # (BH, Sq, hd) — padded to block multiples
+    k: jnp.ndarray,   # (BHkv, Sk, hd)
+    v: jnp.ndarray,
+    *,
+    n_q_heads: int,       # H (per batch) for the GQA index map
+    seq_len: int,         # true (unpadded) kv length
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, Sq, hd = q.shape
+    BHkv = k.shape[0]
+    Sk = k.shape[1]
+    # q row bh = b * H + h  ->  kv row b * Hkv + h // (H // Hkv)
+    H = n_q_heads
+    Hkv = BHkv // (BH // H)
+    rep = H // Hkv
+
+    def kv_index(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // rep, ki, 0)
+
+    grid = (BH, Sq // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_k=block_k, n_kv=grid[2], seq_len=seq_len,
+        window=window, causal=causal, scale=hd ** -0.5,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)

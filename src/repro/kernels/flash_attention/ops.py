@@ -1,0 +1,48 @@
+"""Public wrapper: (B, S, H, hd) layout, padding, GQA head mapping."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,   # (B, S, H, hd)
+    k: jnp.ndarray,   # (B, S, Hkv, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, S))
+
+    pad_q = (-S) % bq
+    pad_k = (-S) % bk
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    if pad_q:
+        qr = jnp.pad(qr, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kr = jnp.pad(kr, ((0, 0), (0, pad_k), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, pad_k), (0, 0)))
+
+    out = flash_attention_pallas(
+        qr, kr, vr,
+        n_q_heads=H, seq_len=S, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    out = out[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return out

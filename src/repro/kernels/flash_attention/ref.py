@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (GQA, causal / sliding-window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,   # (B, S, H, hd)
+    k: jnp.ndarray,   # (B, S, Hkv, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    if causal:
+        diff = jnp.arange(Sq)[:, None] - jnp.arange(Sk)[None, :]
+        ok = diff >= 0
+        if window is not None:
+            ok &= diff < window
+        s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,66 @@
+"""Public wrapper for the block-sparse SpMM kernel.
+
+``block_spmm(a, x)`` pads to tile multiples, computes the block mask on the
+fly (inside jit — a cheap max-reduce per tile), runs the Pallas kernel and
+slices the padding off. ``neighbor_mean`` expresses the paper's padded
+neighbor-list aggregation as an SpMM against a normalised adjacency built
+from (idx, mask) — the form the FedGCN layer uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm.spmm import spmm_pallas
+
+
+def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "block_d", "interpret"))
+def block_spmm(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_n: int = 128,
+    block_m: int = 128,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Y = A @ X via the block-skipping Pallas kernel. a (N, M), x (M, D)."""
+    N, D = a.shape[0], x.shape[1]
+    ap = _pad_to(a, block_n, block_m)
+    xp = _pad_to(x, block_m, block_d)
+    nb_n, nb_m = ap.shape[0] // block_n, ap.shape[1] // block_m
+    tiles = ap.reshape(nb_n, block_n, nb_m, block_m)
+    mask = (jnp.abs(tiles).max(axis=(1, 3)) > 0).astype(jnp.int32)   # (nb_n, nb_m)
+    y = spmm_pallas(
+        ap, xp, mask,
+        block_n=block_n, block_m=block_m, block_d=block_d, interpret=interpret,
+    )
+    return y[:N, :D]
+
+
+def adjacency_from_neighbors(nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Dense row-normalised adjacency (N, m) from a padded neighbor list."""
+    N, K = nbr_idx.shape
+    deg = jnp.maximum(nbr_mask.sum(-1, keepdims=True), 1.0)
+    w = nbr_mask / deg                                               # (N, K)
+    a = jnp.zeros((N, m), jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], (N, K))
+    return a.at[rows, nbr_idx].add(w)
+
+
+def neighbor_mean(
+    features: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Mean-aggregate neighbor features via the SpMM kernel."""
+    a = adjacency_from_neighbors(nbr_idx, nbr_mask, features.shape[0])
+    return block_spmm(a, features, interpret=interpret).astype(features.dtype)

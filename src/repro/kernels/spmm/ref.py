@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the block-sparse SpMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Y = A @ X in fp32, cast back to x.dtype."""
+    return (a.astype(jnp.float32) @ x.astype(jnp.float32)).astype(x.dtype)
+
+
+def neighbor_mean_ref(features: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray):
+    """Padded-neighbor-list mean aggregation oracle.
+
+    features (M, D); nbr_idx (N, K) int32 into rows of features; nbr_mask
+    (N, K) {0,1}. Returns (N, D) mean of valid neighbor rows (0 for isolated).
+    """
+    gathered = features[nbr_idx] * nbr_mask[..., None]            # (N, K, D)
+    deg = jnp.maximum(nbr_mask.sum(-1, keepdims=True), 1.0)
+    return (gathered.sum(1) / deg).astype(features.dtype)

@@ -1,0 +1,71 @@
+"""Block-sparse SpMM Pallas kernel: Y = A @ X with block skipping.
+
+This is the FedGCN neighbor-aggregation hot spot adapted to TPU
+(DESIGN.md §4): instead of PyG's irregular row gather/scatter, the
+(normalised) adjacency is viewed as a grid of (bn x bm) dense tiles; tiles
+that contain no edges are skipped via a host-computed block mask, and live
+tiles run as dense MXU matmuls with all operands resident in VMEM.
+
+Grid: (n_row_blocks, n_col_blocks, n_contract_blocks) — the contraction
+dimension is innermost so the fp32 accumulator scratch is revisited.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(mask_ref, a_ref, x_ref, y_ref, acc_ref, *, n_contract: int):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[0, 0] != 0)
+    def _accumulate():
+        a = a_ref[...].astype(jnp.float32)
+        x = x_ref[...].astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            a, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(mi == n_contract - 1)
+    def _finalize():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "block_d", "interpret")
+)
+def spmm_pallas(
+    a: jnp.ndarray,        # (N, M) adjacency tile source (already padded)
+    x: jnp.ndarray,        # (M, D) features (already padded)
+    block_mask: jnp.ndarray,  # (N/bn, M/bm) int32 — 1 where the A tile has edges
+    *,
+    block_n: int = 128,
+    block_m: int = 128,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    N, M = a.shape
+    D = x.shape[1]
+    grid = (N // block_n, D // block_d, M // block_m)
+    kernel = functools.partial(_spmm_kernel, n_contract=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ni, di, mi: (ni, mi)),              # block mask
+            pl.BlockSpec((block_n, block_m), lambda ni, di, mi: (ni, mi)),  # A tile
+            pl.BlockSpec((block_m, block_d), lambda ni, di, mi: (mi, di)),  # X tile
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda ni, di, mi: (ni, di)),
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_n, block_d), jnp.float32)],
+        interpret=interpret,
+    )(block_mask, a, x)

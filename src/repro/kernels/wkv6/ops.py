@@ -1,0 +1,35 @@
+"""Public wrapper: (B, T, H, N) layout -> per-head rows, padding, reshape."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.wkv6 import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
+    """r,k,v,w: (B, T, H, N); u: (H, N). Returns (y (B,T,H,N), S (B,H,N,N)).
+
+    Pads T to a chunk multiple with w=1, k=0 (identity steps) so the final
+    state matches the unpadded recurrence.
+    """
+    B, T, H, N = r.shape
+    ct = min(chunk, max(8, T))
+    pad = (-T) % ct
+
+    def to_rows(x, fill=0.0):
+        x = x.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)), constant_values=fill)
+        return x
+
+    rr, kk, vv = to_rows(r), to_rows(k), to_rows(v)
+    ww = to_rows(w, fill=1.0)
+    uu = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+
+    y, s = wkv6_pallas(rr, kk, vv, ww, uu, chunk=ct, interpret=interpret)
+    y = y[:, :T].reshape(B, H, T, N).transpose(0, 2, 1, 3)
+    return y, s.reshape(B, H, N, N)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV6 recurrence (same math as models/rwkv.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    """r,k,v,w: (B, T, H, N); u: (H, N). Returns (y (B,T,H,N), S (B,H,N,N))."""
+    B, T, H, N = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = [a.astype(jnp.float32) for a in inp]
+        coef = jnp.sum(rt * u * kt, axis=-1, keepdims=True)
+        y = coef * vt + jnp.einsum("bhn,bhnm->bhm", rt, S)
+        S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    S, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), S

@@ -1,0 +1,90 @@
+"""RWKV6 WKV recurrence Pallas kernel.
+
+TPU adaptation (DESIGN.md §4): RWKV6's data-dependent per-channel decay makes
+the recurrence non-factorable into chunk matmuls without per-channel (Lc, Lc)
+decay tensors, so instead of a GPU-style chunked matmul form we keep the
+(N x N) state *resident in VMEM* across the whole time axis and stream the
+(r, k, v, w) token blocks through it. HBM traffic is O(T*N) per head instead
+of O(T*N^2) for a naive XLA scan that spills the state each step; compute is
+VPU outer-products on hardware-aligned (N x N) tiles.
+
+Grid: (B*H, T/chunk) — heads parallel, time sequential ("arbitrary").
+State scratch persists across the sequential time dimension; reset at t=0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, state_ref,
+                 *, chunk: int, n_chunks: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[0].astype(jnp.float32)                     # (N,)
+
+    def step(t, _):
+        rt = r_ref[0, t].astype(jnp.float32)             # (N,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        S = state_ref[...]                               # (N, N) fp32
+        coef = jnp.sum(rt * u * kt)                      # scalar
+        y = coef * vt + rt @ S                           # (N,)
+        state_ref[...] = wt[:, None] * S + kt[:, None] * vt[None, :]
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ti == n_chunks - 1)
+    def _emit_state():
+        s_out_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(
+    r: jnp.ndarray,   # (BH, T, N)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,   # per-channel decay in (0, 1)
+    u: jnp.ndarray,   # (BH, N) bonus (pre-expanded per head)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+):
+    BH, T, N = r.shape
+    assert T % chunk == 0, f"T={T} must be a multiple of chunk={chunk}"
+    n_chunks = T // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+    rkvw_spec = pl.BlockSpec((1, chunk, N), lambda bh, ti: (bh, ti, 0))
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            rkvw_spec, rkvw_spec, rkvw_spec, rkvw_spec,
+            pl.BlockSpec((1, N), lambda bh, ti: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, N), lambda bh, ti: (bh, ti, 0)),
+            pl.BlockSpec((1, N, N), lambda bh, ti: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, N), r.dtype),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_out

@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers, SPMD-partitions and compiles, and extract the roofline
+terms from the compiled artifact.
+
+The two lines above MUST stay first (before any jax import): jax locks the
+device count on first init, and the dry-run needs 512 placeholder host
+devices to build the production meshes. Do NOT set this flag anywhere else —
+smoke tests and benchmarks run on the single real CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh pod1
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    INPUT_SHAPES,
+    get_config,
+    input_specs,
+    list_archs,
+    long_context_variant,
+    shape_applicable,
+)
+from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_label
+from repro.models import lm
+from repro.models.layers import activation_sharding_ctx
+from repro.optim import adamw_init
+from repro.optim.schedules import constant
+from repro.sharding.specs import (
+    activation_rules,
+    batch_spec,
+    decode_state_spec,
+    param_spec_tree,
+)
+from repro.utils.hlo import collective_stats, duplicate_fusion_ratio
+from repro.utils.roofline import RooflineReport
+
+# archs whose optimizer moments drop to bf16 to fit 16 GB/chip (DESIGN.md §6.6)
+BF16_MOMENT_ARCHS = {"llama3-405b", "arctic-480b", "dbrx-132b"}
+
+
+def _sharded(mesh, spec_tree, shape_tree):
+    return jax.tree_util.tree_map(
+        lambda spec, sds: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=NamedSharding(mesh, spec)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_case(arch: str, shape_name: str, mesh, *, attn_impl: str | None = None,
+               fsdp: bool = True, extra: dict | None = None, profile: str = "tp"):
+    """Returns (step_fn, example_args (ShapeDtypeStructs w/ shardings), meta)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    overrides = dict(extra or {})
+    if attn_impl:
+        overrides["attn_impl"] = attn_impl
+    n_params = cfg.param_count()
+    if shape.kind == "train":
+        # production default: activation checkpointing over layer units
+        overrides.setdefault("remat", True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    rules = activation_rules(mesh, train=shape.kind == "train", profile=profile)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda: lm.init_lm(key, cfg))
+    pspec = param_spec_tree(params_shapes, mesh, fsdp=fsdp and shape.kind == "train",
+                            profile=profile)
+    params_sds = _sharded(mesh, pspec, params_shapes)
+
+    data = input_specs(cfg, shape)
+    data_sds = {
+        k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype,
+            sharding=NamedSharding(mesh, batch_spec(mesh, shape.global_batch,
+                                                    len(v.shape), profile)
+                                   if v.shape else P()))
+        for k, v in data.items()
+    }
+
+    meta = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_label(mesh),
+        "kind": shape.kind, "params": n_params,
+        "active_params": cfg.active_param_count(),
+        "remat": cfg.remat, "attn_impl": cfg.attn_impl, "profile": profile,
+    }
+
+    if shape.kind == "train":
+        moment_dtype = jnp.bfloat16 if arch in BF16_MOMENT_ARCHS else jnp.float32
+        opt_shapes = jax.eval_shape(lambda p: adamw_init(p, moment_dtype), params_shapes)
+        from repro.sharding.specs import param_spec as _ps
+
+        total_mesh = 1
+        for v in mesh.shape.values():
+            total_mesh *= v
+
+        def _opt_spec(path, leaf):
+            if leaf.ndim == 0:
+                return P()
+            if profile == "dp":
+                # ZeRO-1-style: weights replicate, moments shard over the
+                # whole mesh on the first divisible dim
+                axes = [None] * leaf.ndim
+                all_axes = tuple(mesh.shape.keys())
+                for i, dim in enumerate(leaf.shape):
+                    if dim % total_mesh == 0:
+                        axes[i] = all_axes
+                        break
+                    if dim % mesh.shape["model"] == 0 and dim >= mesh.shape["model"]:
+                        axes[i] = "model"
+                        break
+                return P(*axes)
+            # mu/nu mirror the param specs; drop the leading AdamState index
+            return _ps(path[1:], leaf, mesh, fsdp=fsdp)
+
+        ospec = jax.tree_util.tree_map_with_path(_opt_spec, opt_shapes)
+        opt_sds = _sharded(mesh, ospec, opt_shapes)
+        base_step = lm.make_train_step(cfg, constant(3e-4))
+
+        def step(params, opt_state, batch):
+            with activation_sharding_ctx(rules):
+                return base_step(params, opt_state, batch)
+
+        tokens = shape.global_batch * shape.seq_len
+        meta["model_flops"] = 6.0 * cfg.active_param_count() * tokens
+        return step, (params_sds, opt_sds, data_sds), meta
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            with activation_sharding_ctx(rules):
+                logits, aux = lm.lm_forward(
+                    params, cfg, batch["tokens"],
+                    image_embeds=batch.get("image_embeds"),
+                    enc_frames=batch.get("enc_frames"))
+                return logits[:, -1]
+
+        tokens = shape.global_batch * shape.seq_len
+        meta["model_flops"] = 2.0 * cfg.active_param_count() * tokens
+        return step, (params_sds, data_sds), meta
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    enc_out_sds = None
+    if cfg.n_encoder_layers:
+        enc_out_sds = jax.ShapeDtypeStruct((B, cfg.encoder_seq_len, cfg.d_model), cfg.jnp_dtype)
+    state_shapes = jax.eval_shape(
+        lambda p: lm.init_decode_state(p, cfg, B, S, enc_out=enc_out_sds)
+        if enc_out_sds is None else lm.init_decode_state(p, cfg, B, S, enc_out=jnp.zeros(enc_out_sds.shape, enc_out_sds.dtype)),
+        params_shapes,
+    )
+    sspec = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: decode_state_spec(path, leaf, mesh, B), state_shapes)
+    state_sds = _sharded(mesh, sspec, state_shapes)
+
+    def step(params, state, batch):
+        with activation_sharding_ctx(rules):
+            return lm.decode_step(params, cfg, state, batch["tokens"], batch["pos"])
+
+    meta["model_flops"] = 2.0 * cfg.active_param_count() * B  # one token per seq
+    return step, (params_sds, state_sds, data_sds), meta
+
+
+def _compile_once(arch, shape_name, mesh, *, attn_impl, fsdp, extra, profile="tp"):
+    """Lower + compile one configuration; extract per-device cost numbers."""
+    t0 = time.time()
+    step, args, meta = build_case(arch, shape_name, mesh,
+                                  attn_impl=attn_impl, fsdp=fsdp, extra=extra,
+                                  profile=profile)
+    with mesh:
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    return {
+        "meta": meta,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "flops_dev": float(cost.get("flops", 0.0)),
+        "bytes_dev": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes_dev": float(coll.total_bytes),
+        "coll_by_kind": dict(coll.bytes_by_kind),
+        "coll_counts": dict(coll.count_by_kind),
+        "dot_dup": duplicate_fusion_ratio(hlo),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+
+
+def run_case(arch: str, shape_name: str, mesh_name: str, *, attn_impl=None,
+             fsdp=True, extra=None, profile="tp", verbose=True) -> dict:
+    """Three compiles per case:
+      (1) the FULL model with scan-over-layers — proves the (arch x shape x
+          mesh) combination lowers/partitions/compiles and gives the real
+          per-device memory analysis;
+      (2)+(3) unrolled 1-unit and 2-unit variants — XLA's cost analysis
+          counts a while-loop body once, so per-layer FLOPs/bytes/collective
+          traffic are measured from the unrolled variants and extrapolated:
+          total = A + (U-1)(B-A) + rem_frac (B-A). Exact for the linear layer
+          stack; the remainder partial unit is prorated (DESIGN.md §6.4).
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=mesh_name == "pod2")
+    chips = mesh_chips(mesh)
+    base_extra = dict(extra or {})
+    plen = len(cfg.block_pattern)
+    U = cfg.n_units
+    rem_frac = len(cfg.remainder_pattern) / plen
+    enc1 = 1 if cfg.n_encoder_layers else 0
+
+    try:
+        full = _compile_once(arch, shape_name, mesh, attn_impl=attn_impl,
+                             fsdp=fsdp, profile=profile,
+                             extra={**base_extra, "scan_layers": True})
+        va = _compile_once(arch, shape_name, mesh, attn_impl=attn_impl, fsdp=fsdp,
+                           profile=profile,
+                           extra={**base_extra, "scan_layers": False,
+                                  "n_layers": plen, "n_encoder_layers": enc1})
+        vb = _compile_once(arch, shape_name, mesh, attn_impl=attn_impl, fsdp=fsdp,
+                           profile=profile,
+                           extra={**base_extra, "scan_layers": False,
+                                  "n_layers": 2 * plen, "n_encoder_layers": 2 * enc1})
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+    mult = (U - 1) + rem_frac
+
+    def extrap(key):
+        a, b = va[key], vb[key]
+        return a + mult * (b - a)
+
+    flops_dev = extrap("flops_dev")
+    bytes_dev = extrap("bytes_dev")
+    coll_bytes_dev = extrap("coll_bytes_dev")
+    coll_by_kind = {
+        k: va["coll_by_kind"].get(k, 0) + mult * (vb["coll_by_kind"].get(k, 0) - va["coll_by_kind"].get(k, 0))
+        for k in set(va["coll_by_kind"]) | set(vb["coll_by_kind"])
+    }
+
+    meta = full["meta"]
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_dev * chips, hlo_bytes=bytes_dev * chips,
+        collective_bytes=coll_bytes_dev * chips,
+        model_flops=meta["model_flops"],
+    )
+
+    result = {
+        "status": "ok",
+        **meta,
+        "mesh": mesh_name,
+        "chips": chips,
+        "lower_s": round(full["lower_s"], 2),
+        "compile_s": round(full["compile_s"], 2),
+        "variant_compile_s": round(va["compile_s"] + vb["compile_s"], 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_bytes_dev,
+        "collectives": {k: float(v) for k, v in coll_by_kind.items()},
+        "dot_duplication": vb["dot_dup"],
+        "roofline": rep.row(),
+        "memory": full["memory"],
+    }
+    if verbose:
+        print(rep.pretty())
+        print(f"    full compile={full['compile_s']:.1f}s variants={result['variant_compile_s']:.1f}s "
+              f"temp/device={result['memory']['temp_bytes']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*INPUT_SHAPES, None])
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--attn-impl", default=None, choices=[None, "einsum", "chunked"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON results")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}|{shape}|{mesh_name}"
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    path = os.path.join(args.out, f"{arch}_{shape}_{mesh_name}.json")
+                    if os.path.exists(path):
+                        print(f"[cached] {tag}")
+                        continue
+                print(f"=== {tag} ===", flush=True)
+                r = run_case(arch, shape, mesh_name,
+                             attn_impl=args.attn_impl, fsdp=not args.no_fsdp)
+                results.append(r)
+                if r["status"] == "error":
+                    print(f"    ERROR: {r['error']}")
+                elif r["status"] == "skipped":
+                    print(f"    SKIPPED: {r['reason']}")
+                if args.out:
+                    with open(path, "w") as f:
+                        json.dump(r, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run of the PAPER'S OWN workload: one FedAIS round
+(Algorithm 1) with K clients sharded across the production mesh.
+
+Each client's LocalUpdate is vmapped over a client axis that shards over the
+mesh ("data" x "model" = one client per chip on pod1), so the cross-client
+ghost pull inside LocalUpdate lowers to gather/all-to-all collectives across
+chips — exactly the embedding-synchronization network phase of the real
+deployment — and FedAvg lowers to an all-reduce. This is the FedGCN-scale
+companion to launch/dryrun.py's LM cases.
+
+    PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh pod1
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.fedais import MethodConfig, make_local_update
+from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_label
+from repro.models.gcn import HIDDEN, gcn_init, gcn_param_count
+from repro.utils.hlo import collective_stats
+from repro.utils.roofline import RooflineReport
+
+
+def build_round_step(mcfg: MethodConfig, K: int, n_max: int, g_max: int,
+                     n_feat: int, n_classes: int, mesh):
+    """Returns (round_step, abstract args with shardings)."""
+    H1 = HIDDEN[0]
+    local_update = make_local_update(mcfg, n_max, g_max, H1)
+    client_axes = tuple(mesh.shape.keys())  # clients shard over the whole mesh
+
+    def round_step(params, client, hist1, age, ghost_feat, prev_loss, tau, keys):
+        out = jax.vmap(
+            local_update,
+            in_axes=(None, 0, None, None, 0, 0, 0, 0, None, None, None, 0),
+        )(params, client, client["features"], hist1, hist1, age, ghost_feat,
+          prev_loss, tau, jnp.asarray(mcfg.neighbor_fanout, jnp.int32),
+          jnp.asarray(0, jnp.int32), keys)
+        new_params, new_hist1, new_age, new_ghost, stats = out
+        # FedAvg over every client (all-reduce across the mesh)
+        agg = jax.tree_util.tree_map(lambda x: x.mean(axis=0), new_params)
+        return agg, new_hist1, new_age, new_ghost, stats["loss_all"]
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+    c = P(client_axes)            # client-sharded leading axis
+    r = P()                       # replicated
+    n_tot = n_max + g_max
+    params = jax.eval_shape(lambda: gcn_init(jax.random.PRNGKey(0), n_feat, n_classes))
+    params = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=NamedSharding(mesh, r)),
+        params)
+    client = {
+        "features": sds((K, n_max, n_feat), jnp.float32, c),
+        "labels": sds((K, n_max), jnp.int32, c),
+        "node_mask": sds((K, n_max), jnp.float32, c),
+        "train_mask": sds((K, n_max), jnp.float32, c),
+        "nbr_idx": sds((K, n_max, 16), jnp.int32, c),
+        "nbr_mask": sds((K, n_max, 16), jnp.float32, c),
+        "ghost_owner": sds((K, g_max), jnp.int32, c),
+        "ghost_row": sds((K, g_max), jnp.int32, c),
+        "ghost_mask": sds((K, g_max), jnp.float32, c),
+    }
+    args = (
+        params,
+        client,
+        sds((K, n_tot, HIDDEN[0]), jnp.float32, c),   # hist1 (all clients)
+        sds((K, n_tot), jnp.int32, c),                # age
+        sds((K, g_max, n_feat), jnp.float32, c),      # ghost features
+        sds((K, n_max), jnp.float32, c),              # prev loss
+        jax.ShapeDtypeStruct((), jnp.int32),          # tau
+        sds((K, 2), jnp.uint32, c),                   # per-client PRNG keys
+    )
+    return round_step, args
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--clients", type=int, default=0, help="default: one per chip")
+    ap.add_argument("--n-max", type=int, default=512)
+    ap.add_argument("--g-max", type=int, default=256)
+    ap.add_argument("--features", type=int, default=128)
+    ap.add_argument("--classes", type=int, default=41)   # reddit-like
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    rc = 0
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=mesh_name == "pod2")
+        chips = mesh_chips(mesh)
+        K = args.clients or chips
+        mcfg = MethodConfig(name="fedais", local_epochs=4, batch_cap=args.n_max)
+        step, sargs = build_round_step(mcfg, K, args.n_max, args.g_max,
+                                       args.features, args.classes, mesh)
+        t0 = time.time()
+        try:
+            with mesh:
+                lowered = jax.jit(step).lower(*sargs)
+                compiled = lowered.compile()
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0] if cost else {}
+                mem = compiled.memory_analysis()
+                hlo = compiled.as_text()
+        except Exception as e:
+            print(f"[{mesh_name}] ERROR: {type(e).__name__}: {e}")
+            rc = 1
+            continue
+        coll = collective_stats(hlo)
+        n_params = gcn_param_count(args.features, args.classes)
+        # per-round model flops: J epochs x batch fwd+bwd over K clients
+        from repro.models.gcn import gcn_flops_per_node
+        flops_model = 3.0 * gcn_flops_per_node(args.features, args.classes, 8.0) \
+            * args.n_max * mcfg.local_epochs * K
+        rep = RooflineReport(
+            arch="fedgcn-graphsage", shape=f"K{K}", mesh=mesh_name, chips=chips,
+            hlo_flops=float(cost.get("flops", 0.0)) * chips,
+            hlo_bytes=float(cost.get("bytes accessed", 0.0)) * chips,
+            collective_bytes=float(coll.total_bytes) * chips,
+            model_flops=flops_model,
+        )
+        result = {
+            "status": "ok", "arch": "fedgcn-graphsage", "shape": f"K{K}",
+            "mesh": mesh_name, "chips": chips, "clients": K,
+            "gcn_params": n_params,
+            "compile_s": round(time.time() - t0, 1),
+            "collectives": {k: int(v) for k, v in coll.bytes_by_kind.items()},
+            "roofline": rep.row(),
+            "memory": {"temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
+        }
+        print(rep.pretty())
+        print(f"    [{mesh_name}] K={K} compile={result['compile_s']}s "
+              f"collectives: {coll.summary()}")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, f"fedgcn_{mesh_name}.json"), "w") as f:
+                json.dump(result, f, indent=1)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+"""Model zoo: generic LM covering all assigned families + the paper's GCN."""

@@ -1,0 +1,111 @@
+"""GraphSAGE-style GCN (the paper's model: 2 hidden layers, 256/128) with
+historical-embedding support — the JAX realisation of paper Eq. (2)/(6).
+
+The client-side forward prunes the computation graph to the batch nodes plus
+their direct 1-hop neighbors; deeper recursion is replaced by table lookups:
+layer-0 neighbors read exact own features / synced ghost features, layer-1
+neighbors read fresh in-batch values scattered over the historical table.
+Gradients flow only through fresh (in-batch) entries — GNNAutoScale
+semantics extended across clients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+HIDDEN = (256, 128)
+
+
+def gcn_init(key, n_features: int, n_classes: int, hidden=HIDDEN, dtype=jnp.float32) -> dict:
+    dims = (n_features, *hidden)
+    ks = jax.random.split(key, 2 * len(hidden) + 1)
+    params: dict = {}
+    for l in range(len(hidden)):
+        params[f"w_self{l}"] = dense_init(ks[2 * l], dims[l], dims[l + 1], dtype)
+        params[f"w_nbr{l}"] = dense_init(ks[2 * l + 1], dims[l], dims[l + 1], dtype)
+        params[f"b{l}"] = jnp.zeros((dims[l + 1],), dtype)
+    params["w_cls"] = dense_init(ks[-1], hidden[-1], n_classes, dtype)
+    params["b_cls"] = jnp.zeros((n_classes,), dtype)
+    return params
+
+
+def _aggregate(table: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean-aggregate neighbor rows. table (M, d); nbr_idx/mask (b, K)."""
+    gathered = table[nbr_idx] * nbr_mask[..., None]
+    deg = jnp.maximum(nbr_mask.sum(-1, keepdims=True), 1.0)
+    return gathered.sum(1) / deg
+
+
+def _sage_layer(params: dict, l: int, h_self: jnp.ndarray, h_agg: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.relu(
+        h_self @ params[f"w_self{l}"] + h_agg @ params[f"w_nbr{l}"] + params[f"b{l}"]
+    )
+
+
+def gcn_batch_forward(
+    params: dict,
+    features: jnp.ndarray,      # (n, F) own features
+    ghost_feat: jnp.ndarray,    # (g, F) synced ghost features (historical l=0)
+    hist1: jnp.ndarray,         # (n + g, H1) historical layer-1 embeddings
+    nbr_idx: jnp.ndarray,       # (n, K) into [own | ghost]
+    nbr_mask: jnp.ndarray,      # (n, K)
+    batch_idx: jnp.ndarray,     # (b,) rows of this batch
+    nbr_keep: jnp.ndarray | None = None,   # optional (b, K) extra neighbor mask
+):
+    """Returns (logits (b, C), fresh_h1 (b, H1), h2 (b, H2))."""
+    table0 = jnp.concatenate([features, ghost_feat], axis=0)
+    b_idx = nbr_idx[batch_idx]
+    b_mask = nbr_mask[batch_idx]
+    if nbr_keep is not None:
+        b_mask = b_mask * nbr_keep
+
+    h_self0 = features[batch_idx]
+    agg0 = _aggregate(table0, b_idx, b_mask)
+    h1 = _sage_layer(params, 0, h_self0, agg0)                  # (b, 256)
+
+    # fresh in-batch values over the historical table (stop-grad on history)
+    table1 = jax.lax.stop_gradient(hist1).at[batch_idx].set(h1)
+    agg1 = _aggregate(table1, b_idx, b_mask)
+    h2 = _sage_layer(params, 1, h1, agg1)                       # (b, 128)
+
+    logits = h2 @ params["w_cls"] + params["b_cls"]
+    return logits, h1, h2
+
+
+def gcn_full_forward(params, features, nbr_idx, nbr_mask):
+    """Exact full-graph forward (server-side evaluation; no history)."""
+    h = features
+    for l in range(len(HIDDEN)):
+        agg = _aggregate(h, nbr_idx, nbr_mask)
+        h = _sage_layer(params, l, h, agg)
+    return h @ params["w_cls"] + params["b_cls"]
+
+
+def per_node_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """(b, C), (b,) -> (b,) cross-entropy per node (no reduction)."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return lse - gold
+
+
+def gcn_param_count(n_features: int, n_classes: int, hidden=HIDDEN) -> int:
+    dims = (n_features, *hidden)
+    total = 0
+    for l in range(len(hidden)):
+        total += 2 * dims[l] * dims[l + 1] + dims[l + 1]
+    total += hidden[-1] * n_classes + n_classes
+    return total
+
+
+def gcn_flops_per_node(n_features: int, n_classes: int, avg_deg: float, hidden=HIDDEN) -> float:
+    """Forward FLOPs per training node (matmuls + aggregation)."""
+    dims = (n_features, *hidden)
+    fl = 0.0
+    for l in range(len(hidden)):
+        fl += 2 * 2 * dims[l] * dims[l + 1]       # self + nbr matmuls
+        fl += 2 * avg_deg * dims[l]               # mean aggregation
+    fl += 2 * hidden[-1] * n_classes
+    return fl

@@ -1,0 +1,109 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Recurrence: a_t = a^(c*r_t) with a = sigmoid(Lambda) (diagonal, in (0,1)),
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t). Diagonal linear
+recurrence -> jax.lax.associative_scan for the full-sequence path (log-depth,
+TPU-friendly), O(1)-state single step for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def rglru_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    dt = cfg.jnp_dtype
+    ks = iter(jax.random.split(key, 10))
+    nx = lambda a, b: dense_init(next(ks), a, b, dt)
+    # Lambda init so that a = sigmoid(Lambda) in approx (0.9, 0.999)
+    lam_u = jax.random.uniform(next(ks), (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(lam_u / (1 - lam_u))
+    return {
+        "ln": rmsnorm_init(d, dt),
+        "w_rec_in": nx(d, w),          # recurrent branch input proj
+        "w_gate_in": nx(d, w),         # multiplicative (gelu) branch
+        "conv_w": (jax.random.normal(next(ks), (cfg.conv1d_width, w), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "lam": lam,
+        "w_a": nx(w, w), "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": nx(w, w), "b_i": jnp.zeros((w,), jnp.float32),
+        "w_out": nx(w, d),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B,T,W), w: (K,W)."""
+    K = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (K - 1 - i, 0), (0, 0)))[:, : x.shape[1]] for i in range(K)]
+    out = sum(p * w[i].astype(x.dtype) for i, p in enumerate(pads))
+    return out + b.astype(x.dtype)
+
+
+def _rglru_gates(p, cfg, x):
+    """x: (..., W) conv output -> (log_a, scaled input) both fp32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(x32 @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -cfg.rglru_c * r * jax.nn.softplus(p["lam"])       # log sigmoid(lam)^(c r)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return a, gated
+
+
+def rglru_scan(a, b, h0=None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    a, b: (B, T, W) fp32. Returns (h (B,T,W), final state (B,W)).
+    """
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block_apply(p, cfg, x):
+    """Full-sequence Griffin recurrent block. x: (B,T,d)."""
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    rec = h @ p["w_rec_in"]
+    rec = _causal_conv1d(rec, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(p, cfg, rec)
+    y, _ = rglru_scan(a, b)
+    gate = jax.nn.gelu(h @ p["w_gate_in"])
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return x + out
+
+
+def rglru_init_state(cfg, batch: int) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), cfg.jnp_dtype),
+    }
+
+
+def rglru_block_decode(p, cfg, x, state):
+    """x: (B,1,d) -> (out, new state)."""
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    rec = h @ p["w_rec_in"]                                     # (B,1,W)
+    window = jnp.concatenate([state["conv"], rec], axis=1)      # (B,K,W)
+    K = p["conv_w"].shape[0]
+    conv_out = (
+        jnp.einsum("bkw,kw->bw", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )[:, None]
+    a, b = _rglru_gates(p, cfg, conv_out)
+    hnew = a[:, 0] * state["h"] + b[:, 0]
+    gate = jax.nn.gelu(h @ p["w_gate_in"])
+    out = (hnew[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return x + out, {"h": hnew, "conv": window[:, 1:]}

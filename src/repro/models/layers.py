@@ -1,0 +1,150 @@
+"""Common neural building blocks (pure JAX, params = plain dicts).
+
+Sharding hooks: ``shard_activation(x, *logical_axes)`` applies a
+``with_sharding_constraint`` when a logical->mesh rule set is installed via
+``activation_sharding_ctx`` (used by launch/), and is a no-op otherwise so all
+CPU tests run unannotated.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(rules: dict[str, object] | None):
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = prev
+
+
+def shard_activation(x, *logical_axes):
+    rules = getattr(_TLS, "rules", None)
+    if not rules:
+        return x
+    spec = P(*(rules.get(a) for a in logical_axes))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm(x: jnp.ndarray, n_groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head group norm used by RWKV time-mix output; no learned affine."""
+    *lead, d = x.shape
+    g = x.reshape(*lead, n_groups, d // n_groups).astype(jnp.float32)
+    mean = g.mean(axis=-1, keepdims=True)
+    var = g.var(axis=-1, keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    return g.reshape(*lead, d).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "sqrelu":  # nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, gated: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_in": dense_init(k1, d, ff, dtype), "w_out": dense_init(k2, ff, d, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d, ff, dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act_name: str) -> jnp.ndarray:
+    act = activation_fn(act_name)
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    h = shard_activation(h, "batch", "seq", "ff")
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray, mask=None):
+    """Next-token cross entropy. logits (..., V) fp-any; labels (...) int."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,438 @@
+"""Generic language model covering every assigned architecture family.
+
+A model = embedding + N blocks + final norm + LM head. Blocks are described
+by ``cfg.block_pattern`` (a repeating unit, e.g. 5 local + 1 global for
+gemma3, rec/rec/local for recurrentgemma). Weights of repeated units are
+stacked on a leading axis and applied with ``lax.scan`` so the HLO stays
+compact for 126-layer dry-runs (DESIGN.md §6.4); the remainder partial unit
+is applied unrolled.
+
+Entry points:
+    init_lm(key, cfg)                          -> params
+    lm_forward(params, cfg, tokens, ...)       -> (logits, aux_loss)
+    lm_loss(params, cfg, batch)                -> (loss, metrics)
+    make_train_step(cfg, lr_schedule)          -> jit-able train_step
+    lm_prefill(params, cfg, tokens, max_len)   -> (last_logits, decode_state)
+    init_decode_state(params, cfg, B, max_len) -> state
+    decode_step(params, cfg, state, token, pos)-> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import griffin, rwkv
+from repro.models.attention import attn_init, decode_attn, init_kv_cache, multihead_attn
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    shard_activation,
+    softmax_xent,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.optim import AdamState, adamw_init, adamw_update
+from repro.utils.tree import global_norm_clip
+
+PyTree = Any
+
+_ATTN_KINDS = {"attn": "causal", "local": "local", "enc": "bidir", "dec": "causal"}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _ffn_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {"ln": rmsnorm_init(cfg.d_model, cfg.jnp_dtype)}
+    if cfg.n_experts:
+        p["moe"] = moe_init(k1, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.jnp_dtype)
+    return p
+
+
+def init_block(key, cfg, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "rwkv":
+        return rwkv.rwkv_block_init(k1, cfg)
+    if kind == "rec":
+        return {"rec": griffin.rglru_block_init(k1, cfg), "ffn": _ffn_init(k2, cfg)}
+    p = {"attn": attn_init(k1, cfg), "ffn": _ffn_init(k2, cfg)}
+    if kind == "dec":
+        p["xattn"] = attn_init(k3, cfg, cross=True)
+    return p
+
+
+def _init_unit(key, cfg, pattern) -> dict:
+    keys = jax.random.split(key, max(1, len(pattern)))
+    return {f"b{i}": init_block(keys[i], cfg, kind) for i, kind in enumerate(pattern)}
+
+
+def init_lm(key, cfg) -> dict:
+    keys = iter(jax.random.split(key, 10))
+    dt = cfg.jnp_dtype
+    params: dict = {"embed": embed_init(next(keys), cfg.vocab_size, cfg.d_model, dt)}
+
+    n_units = cfg.n_units
+    unit_keys = jax.random.split(next(keys), n_units)
+    params["units"] = jax.vmap(lambda k: _init_unit(k, cfg, cfg.block_pattern))(unit_keys)
+    if cfg.remainder_pattern:
+        params["rem"] = _init_unit(next(keys), cfg, cfg.remainder_pattern)
+
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(next(keys), cfg.d_model, cfg.vocab_size, dt)
+
+    if cfg.pos_embedding == "learned":
+        params["pos_emb"] = embed_init(next(keys), cfg.max_seq_len, cfg.d_model, dt)
+
+    if cfg.n_encoder_layers:  # whisper encoder (consumes stub frame embeddings)
+        enc_keys = jax.random.split(next(keys), cfg.n_encoder_layers)
+        params["enc_units"] = jax.vmap(lambda k: _init_unit(k, cfg, ("enc",)))(enc_keys)
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, dt)
+        params["enc_pos"] = embed_init(next(keys), cfg.encoder_seq_len, cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_ffn(p, cfg, x):
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_apply(p["moe"], cfg, h)
+    else:
+        y, aux = mlp_apply(p["mlp"], h, cfg.activation), 0.0
+    return x + y, aux
+
+
+def apply_block_full(bp, cfg, kind, x, *, enc_out=None, collect_state=False):
+    """Returns (x, aux_loss, state_or_None)."""
+    state = None
+    if kind == "rwkv":
+        if collect_state:
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            r, k, v, g, w = rwkv._time_mix_inputs(bp, cfg, h, rwkv._shift(h))
+            y, S = rwkv.wkv_scan(r, k, v, w, bp["u"])
+            x = x + rwkv._time_mix_out(bp, cfg, y, g, x.shape)
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            x = x + rwkv._channel_mix(bp, h2, rwkv._shift(h2))
+            state = {"S": S, "x_tm": h[:, -1], "x_cm": h2[:, -1]}
+        else:
+            x = rwkv.rwkv_block_apply(bp, cfg, x)
+        return x, 0.0, state
+    if kind == "rec":
+        if collect_state:
+            h = rmsnorm(bp["rec"]["ln"], x, cfg.norm_eps)
+            rec_in = h @ bp["rec"]["w_rec_in"]
+            conv = griffin._causal_conv1d(rec_in, bp["rec"]["conv_w"], bp["rec"]["conv_b"])
+            a, b = griffin._rglru_gates(bp["rec"], cfg, conv)
+            y, h_last = griffin.rglru_scan(a, b)
+            gate = jax.nn.gelu(h @ bp["rec"]["w_gate_in"])
+            x = x + (y.astype(x.dtype) * gate) @ bp["rec"]["w_out"]
+            K = cfg.conv1d_width
+            pad = jnp.pad(rec_in, ((0, 0), (K - 1, 0), (0, 0)))
+            state = {"h": h_last, "conv": pad[:, pad.shape[1] - (K - 1):]}
+        else:
+            x = griffin.rglru_block_apply(bp["rec"], cfg, x)
+        x, aux = _apply_ffn(bp["ffn"], cfg, x)
+        return x, aux, state
+    # attention kinds
+    akind = _ATTN_KINDS[kind]
+    if collect_state and kind in ("attn", "local", "dec"):
+        out, (kk, vv) = multihead_attn(bp["attn"], cfg, x, kind=akind, return_kv=True)
+        state = {"k": kk, "v": vv}
+    else:
+        out = multihead_attn(bp["attn"], cfg, x, kind=akind)
+    x = x + out
+    if kind == "dec":
+        x = x + multihead_attn(bp["xattn"], cfg, x, kind="bidir", kv_source=enc_out)
+    x, aux = _apply_ffn(bp["ffn"], cfg, x)
+    return x, aux, state
+
+
+def _run_encoder(params, cfg, enc_frames):
+    """Whisper encoder over stub frame embeddings (B, Se, d)."""
+    h = enc_frames.astype(cfg.jnp_dtype) + params["enc_pos"][None, : enc_frames.shape[1]]
+
+    def body(carry, up):
+        hh, aux = carry
+        hh, a, _ = apply_block_full(up["b0"], cfg, "enc", hh)
+        return (hh, aux + a), None
+
+    if cfg.scan_layers:
+        (h, aux), _ = jax.lax.scan(body, (h, 0.0), params["enc_units"])
+    else:
+        aux = 0.0
+        for u in range(cfg.n_encoder_layers):
+            up = jax.tree_util.tree_map(lambda x: x[u], params["enc_units"])
+            (h, aux), _ = body((h, aux), up)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps), aux
+
+
+def _embed_tokens(params, cfg, tokens, image_embeds=None, position_offset=0):
+    h = params["embed"][tokens]
+    if image_embeds is not None:
+        h = jnp.concatenate([image_embeds.astype(h.dtype), h], axis=1)
+    if cfg.pos_embedding == "learned":
+        S = h.shape[1]
+        h = h + params["pos_emb"][None, position_offset : position_offset + S]
+    return h
+
+
+def lm_forward(params, cfg, tokens, *, image_embeds=None, enc_frames=None, collect_state=False):
+    """tokens (B, S) -> (logits (B, S_total, V), aux_loss[, states])."""
+    enc_out = None
+    aux_total = 0.0
+    if cfg.n_encoder_layers:
+        enc_out, enc_aux = _run_encoder(params, cfg, enc_frames)
+        aux_total += enc_aux
+    h = _embed_tokens(params, cfg, tokens, image_embeds)
+    h = shard_activation(h, "batch", "seq", None)
+
+    pattern = cfg.block_pattern
+
+    def unit_body(carry, up):
+        hh, aux = carry
+        states = {}
+        for i, kind in enumerate(pattern):
+            hh, a, st = apply_block_full(up[f"b{i}"], cfg, kind, hh, enc_out=enc_out,
+                                         collect_state=collect_state)
+            aux = aux + a
+            if collect_state:
+                states[f"b{i}"] = st
+        # sequence-parallel boundary: the remat-saved carry shards its seq dim
+        # over the model axis (Megatron SP; §Perf H3.3 — boundary residuals
+        # were the dominant per-device residency, not attention scores)
+        hh = shard_activation(hh, "batch", "boundary_seq", None)
+        return (hh, aux), (states if collect_state else None)
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    if cfg.scan_layers:
+        (h, aux_total), unit_states = jax.lax.scan(body, (h, aux_total), params["units"])
+    else:
+        states_list = []
+        for u in range(cfg.n_units):
+            up = jax.tree_util.tree_map(lambda x: x[u], params["units"])
+            (h, aux_total), st = body((h, aux_total), up)
+            states_list.append(st)
+        unit_states = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states_list)
+            if collect_state else None
+        )
+
+    rem_states = {}
+    for i, kind in enumerate(cfg.remainder_pattern):
+        h, a, st = apply_block_full(params["rem"][f"b{i}"], cfg, kind, h, enc_out=enc_out,
+                                    collect_state=collect_state)
+        aux_total = aux_total + a
+        if collect_state:
+            rem_states[f"b{i}"] = st
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    logits = shard_activation(logits, "batch", "seq", "vocab")
+    if collect_state:
+        return logits, aux_total, (unit_states, rem_states, enc_out)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg, batch):
+    logits, aux = lm_forward(
+        params, cfg, batch["tokens"],
+        image_embeds=batch.get("image_embeds"),
+        enc_frames=batch.get("enc_frames"),
+    )
+    if cfg.n_image_tokens:
+        logits = logits[:, cfg.n_image_tokens :]
+    loss = softmax_xent(logits, batch["labels"])
+    total = loss + 0.01 * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+def make_train_step(cfg, lr_schedule, *, clip_norm: float = 1.0):
+    def train_step(params, opt_state: AdamState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch), has_aux=True
+        )(params)
+        grads, gnorm = global_norm_clip(grads, clip_norm)
+        lr = lr_schedule(opt_state.step)
+        new_params, new_state = adamw_update(grads, opt_state, params, lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg, state_dtype=jnp.float32):
+    params = init_lm(key, cfg)
+    return params, adamw_init(params, state_dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _init_block_state(cfg, kind, batch, max_len, dtype=None):
+    if kind == "rwkv":
+        return rwkv.rwkv_init_state(cfg, batch)
+    if kind == "rec":
+        return griffin.rglru_init_state(cfg, batch)
+    st = init_kv_cache(cfg, batch, max_len, dtype)
+    return st
+
+
+def init_decode_state(params, cfg, batch: int, max_len: int, *, enc_out=None, cache_dtype=None) -> dict:
+    """Zero-initialised decode state (pre-prefill)."""
+
+    def one_unit(pattern):
+        return {
+            f"b{i}": _init_block_state(cfg, kind, batch, max_len, cache_dtype)
+            for i, kind in enumerate(pattern)
+        }
+
+    U = cfg.n_units
+    unit = one_unit(cfg.block_pattern)
+    units = jax.tree_util.tree_map(lambda x: jnp.tile(x[None], (U,) + (1,) * x.ndim), unit)
+    state = {"units": units}
+    if cfg.remainder_pattern:
+        state["rem"] = one_unit(cfg.remainder_pattern)
+    if cfg.n_encoder_layers and enc_out is not None:
+        # precompute cross-attention K/V from the encoder output, per unit
+        hd = cfg.resolved_head_dim
+
+        def cross_kv(up):
+            k = (enc_out @ up["b0"]["xattn"]["wk"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, hd)
+            v = (enc_out @ up["b0"]["xattn"]["wv"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, hd)
+            return {"xk": k, "xv": v}
+
+        state["cross"] = jax.vmap(cross_kv)(params["units"])
+    return state
+
+
+def apply_block_decode(bp, cfg, kind, x, st, pos, cross=None):
+    if kind == "rwkv":
+        return rwkv.rwkv_block_decode(bp, cfg, x, st)
+    if kind == "rec":
+        x, new = griffin.rglru_block_decode(bp["rec"], cfg, x, st)
+        x, _ = _apply_ffn(bp["ffn"], cfg, x)
+        return x, new
+    akind = "local" if kind == "local" else "causal"
+    out, new = decode_attn(bp["attn"], cfg, x, st, pos, kind=akind)
+    x = x + out
+    if kind == "dec" and cross is not None:
+        xout, _ = decode_attn(bp["xattn"], cfg, x, st, pos, cross_kv=(cross["xk"], cross["xv"]))
+        x = x + xout
+    x, _ = _apply_ffn(bp["ffn"], cfg, x)
+    return x, new
+
+
+def decode_step(params, cfg, state, tokens, pos):
+    """One decode step. tokens (B, 1) int32; pos scalar int32.
+
+    Returns (logits (B, 1, V), new_state).
+    """
+    h = params["embed"][tokens]
+    if cfg.pos_embedding == "learned":
+        h = h + params["pos_emb"][pos][None, None]
+    pattern = cfg.block_pattern
+    has_cross = "cross" in state
+
+    def unit_body(h, xs):
+        if has_cross:
+            up, uc, cross = xs
+        else:
+            up, uc = xs
+            cross = None
+        new_uc = {}
+        for i, kind in enumerate(pattern):
+            h, new_uc[f"b{i}"] = apply_block_decode(
+                up[f"b{i}"], cfg, kind, h, uc[f"b{i}"], pos, cross=cross)
+        return h, new_uc
+
+    xs = (params["units"], state["units"]) + ((state["cross"],) if has_cross else ())
+    if cfg.scan_layers:
+        h, new_units = jax.lax.scan(unit_body, h, xs)
+    else:
+        uc_list = []
+        for u in range(cfg.n_units):
+            xu = jax.tree_util.tree_map(lambda x: x[u], xs)
+            h, uc = unit_body(h, xu)
+            uc_list.append(uc)
+        new_units = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *uc_list)
+    new_state = dict(state, units=new_units)
+
+    if cfg.remainder_pattern:
+        new_rem = {}
+        for i, kind in enumerate(cfg.remainder_pattern):
+            h, new_rem[f"b{i}"] = apply_block_decode(
+                params["rem"][f"b{i}"], cfg, kind, h, state["rem"][f"b{i}"], pos)
+        new_state["rem"] = new_rem
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head, new_state
+
+
+def lm_prefill(params, cfg, tokens, max_len, *, image_embeds=None, enc_frames=None):
+    """Run the full prompt, returning (last-token logits, decode state)."""
+    logits, _aux, (unit_states, rem_states, enc_out) = lm_forward(
+        params, cfg, tokens, image_embeds=image_embeds, enc_frames=enc_frames,
+        collect_state=True,
+    )
+    B = tokens.shape[0]
+    S = logits.shape[1]
+    state = init_decode_state(params, cfg, B, max_len, enc_out=enc_out)
+
+    def merge(init_leafpath, full):
+        return full
+
+    # write collected K/V (length S) into the max_len caches; copy rec/rwkv states
+    def write_unit(init_st, got_st):
+        out = {}
+        for bkey, st in got_st.items():
+            ini = init_st[bkey]
+            if st is None:
+                out[bkey] = ini
+            elif "k" in st:  # kv cache: (U?, B, S, Hkv, hd) into (..., max_len, ...)
+                k = ini["k"].at[..., :S, :, :].set(st["k"].astype(ini["k"].dtype))
+                v = ini["v"].at[..., :S, :, :].set(st["v"].astype(ini["v"].dtype))
+                out[bkey] = dict(ini, k=k, v=v)
+            else:
+                out[bkey] = st
+        return out
+
+    state["units"] = write_unit(state["units"], unit_states)
+    if cfg.remainder_pattern:
+        state["rem"] = write_unit(state["rem"], rem_states)
+    return logits[:, -1], state
+
+
+# ---------------------------------------------------------------------------
+# serve step (the dry-run decode entry point)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg):
+    """One-token decode step against a seq_len KV cache (the decode shapes)."""
+
+    def serve_step(params, state, tokens, pos):
+        logits, new_state = decode_step(params, cfg, state, tokens, pos)
+        return logits, new_state
+
+    return serve_step

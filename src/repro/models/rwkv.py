@@ -1,0 +1,197 @@
+"""RWKV6 ("Finch") block: data-dependent-decay time-mix + channel-mix.
+
+arXiv:2404.05892. Pure-JAX reference path uses a sequential ``lax.scan`` over
+time with the (B, H, N, N) state held in fp32 — on TPU the same recurrence is
+provided as a Pallas kernel (``repro.kernels.wkv6``) that keeps the state in
+VMEM across time chunks (HBM traffic O(T*N) instead of O(T*N^2)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, groupnorm, mlp_apply, rmsnorm, rmsnorm_init, shard_activation
+
+LORA_MIX = 32     # rank of the ddlerp lora
+LORA_DECAY = 64   # rank of the decay lora
+
+
+def rwkv_block_init(key, cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    N = cfg.rwkv_head_dim
+    H = d // N
+    dt = cfg.jnp_dtype
+    ks = iter(jax.random.split(key, 20))
+    nx = lambda a, b: dense_init(next(ks), a, b, dt)
+    small = lambda *shape: (jax.random.normal(next(ks), shape, jnp.float32) * 0.02).astype(jnp.float32)
+    return {
+        "ln1": rmsnorm_init(d, dt),
+        "ln2": rmsnorm_init(d, dt),
+        # --- time-mix ---
+        "mu_x": small(d),
+        "mu5": small(5, d),               # w, k, v, r, g
+        "mix_w1": nx(d, 5 * LORA_MIX),
+        "mix_w2": small(5, LORA_MIX, d),
+        "w0": small(d),                   # decay base
+        "decay_w1": nx(d, LORA_DECAY),
+        "decay_w2": nx(LORA_DECAY, d),
+        "u": small(H, N),                 # per-head bonus
+        "wr": nx(d, d), "wk": nx(d, d), "wv": nx(d, d), "wg": nx(d, d), "wo": nx(d, d),
+        # --- channel-mix ---
+        "mu_ck": small(d),
+        "mu_cr": small(d),
+        "wck": nx(d, ff), "wcv": nx(ff, d), "wcr": nx(d, d),
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent interpolation producing the 5 mixed inputs (B,T,5,d)."""
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(xxx @ p["mix_w1"]).reshape(*x.shape[:-1], 5, LORA_MIX)
+    deltas = jnp.einsum("...fr,frd->...fd", lora.astype(jnp.float32), p["mix_w2"])
+    mix = p["mu5"] + deltas                                    # (B,T,5,d) fp32
+    return x[..., None, :] + xx[..., None, :] * mix.astype(x.dtype)
+
+
+def _time_mix_inputs(p, cfg, x, x_prev):
+    """Compute (r, k, v, g, w_decay) from x and its shifted predecessor."""
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    xx = x_prev - x
+    mixed = _ddlerp(p, x, xx)
+    xw, xk, xv, xr, xg = [mixed[..., i, :] for i in range(5)]
+    logw = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32)) @ p[
+        "decay_w2"
+    ].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                                # (B,T,d) in (0,1)
+    r = (xr @ p["wr"]).reshape(*x.shape[:-1], H, N)
+    k = (xk @ p["wk"]).reshape(*x.shape[:-1], H, N)
+    v = (xv @ p["wv"]).reshape(*x.shape[:-1], H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = w.reshape(*x.shape[:-1], H, N)
+    return r, k, v, g, w
+
+
+def wkv_chunked_scan(r, k, v, w, u, chunk: int = 128, state0=None):
+    """WKV via an outer scan over time-chunks with remat at chunk boundaries.
+
+    Reverse-mode through the plain per-step scan saves the (B,H,N,N) state
+    for every timestep (~O(T·N²) HBM — §Perf H2.2). Checkpointing each chunk
+    keeps only chunk-boundary states and recomputes inside the chunk during
+    backward — the pure-JAX analogue of the Pallas kernel's VMEM-resident
+    state (kernels/wkv6).
+    """
+    B, T, H, N = r.shape
+    if T % chunk:
+        return wkv_scan(r, k, v, w, u, state0)
+    n = T // chunk
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(S, inp):
+        rc, kc, vc, wc = inp                      # (B, chunk, H, N)
+        y, S = wkv_scan(rc, kc, vc, wc, u, state0=S)
+        return S, y
+
+    xs = tuple(a.reshape(B, n, chunk, H, N).transpose(1, 0, 2, 3, 4)
+               for a in (r, k, v, w))
+    state, ys = jax.lax.scan(chunk_body, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N)
+    return y, state
+
+
+def wkv_scan(r, k, v, w, u, state0=None):
+    """Sequential WKV recurrence.
+
+    r,k,v,w: (B, T, H, N); u: (H, N). Returns (y (B,T,H,N), final state
+    (B,H,N,N)). State S[n,m]: key-dim n x value-dim m, fp32.
+    """
+    B, T, H, N = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = [a.astype(jnp.float32) for a in inp]   # (B,H,N)
+        coef = jnp.sum(rt * u * kt, axis=-1, keepdims=True)     # (B,H,1)
+        y = coef * vt + jnp.einsum("bhn,bhnm->bhm", rt, S)
+        S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def _time_mix_out(p, cfg, y, g, x_shape):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    y = groupnorm(y.reshape(*x_shape[:-1], d), H)
+    return (y * g) @ p["wo"]
+
+
+def _channel_mix(p, x, x_prev):
+    xx = x_prev - x
+    xk = x + xx * p["mu_ck"].astype(x.dtype)
+    xr = x + xx * p["mu_cr"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    k = shard_activation(k, "batch", "seq", "ff")
+    return jax.nn.sigmoid(xr @ p["wcr"]) * (k @ p["wcv"])
+
+
+def _shift(x):
+    """Token shift: x_prev[t] = x[t-1], zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv_block_apply(p, cfg, x, use_kernel: bool = False):
+    """Full-sequence RWKV6 block. x: (B, T, d)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    r, k, v, g, w = _time_mix_inputs(p, cfg, h, _shift(h))
+    chunk = getattr(cfg, "rwkv_chunk", 0)
+    if use_kernel:
+        from repro.kernels.wkv6 import ops as wkv_ops
+        y, _ = wkv_ops.wkv6(r, k, v, w, p["u"])
+    elif chunk:
+        y, _ = wkv_chunked_scan(r, k, v, w, p["u"], chunk=chunk)
+    else:
+        y, _ = wkv_scan(r, k, v, w, p["u"])
+    x = x + _time_mix_out(p, cfg, y, g, x.shape)
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + _channel_mix(p, h2, _shift(h2))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+
+def rwkv_init_state(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    dt = cfg.jnp_dtype
+    return {
+        "S": jnp.zeros((batch, H, N, N), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), dt),   # last input of time-mix
+        "x_cm": jnp.zeros((batch, d), dt),   # last input of channel-mix
+    }
+
+
+def rwkv_block_decode(p, cfg, x, state):
+    """x: (B, 1, d) -> (out (B,1,d), new state)."""
+    B = x.shape[0]
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    r, k, v, g, w = _time_mix_inputs(p, cfg, h, state["x_tm"][:, None])
+    rt, kt, vt, wt = [a[:, 0].astype(jnp.float32) for a in (r, k, v, w)]
+    S = state["S"]
+    coef = jnp.sum(rt * p["u"] * kt, axis=-1, keepdims=True)
+    y = coef * vt + jnp.einsum("bhn,bhnm->bhm", rt, S)
+    S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+    y = y[:, None].astype(x.dtype)                              # (B,1,H,N)
+    x = x + _time_mix_out(p, cfg, y, g, x.shape)
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    out = x + _channel_mix(p, h2, state["x_cm"][:, None])
+    new_state = {"S": S, "x_tm": h[:, 0], "x_cm": h2[:, 0]}
+    return out, new_state

@@ -1,0 +1,13 @@
+"""Pure-JAX optimizers (container has no optax)."""
+from repro.optim.adam import AdamState, adamw_init, adamw_update, sgd_update
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "AdamState",
+    "adamw_init",
+    "adamw_update",
+    "sgd_update",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,73 @@
+"""AdamW + SGD in pure JAX, pytree-native.
+
+``state_dtype`` lets large models (llama3-405b on 16 GB v5e chips) keep the
+first/second moments in bf16 — see DESIGN.md §6 item 6.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray   # scalar int32
+    mu: PyTree          # first moment
+    nu: PyTree          # second moment
+
+
+def adamw_init(params: PyTree, state_dtype=jnp.float32) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamState,
+    params: PyTree,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.001,
+) -> tuple[PyTree, AdamState]:
+    """One AdamW step. Returns (new_params, new_state).
+
+    Math is done in fp32 regardless of the storage dtype of moments/params.
+    """
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1.0 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1.0 - b2)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        p32 = p.astype(jnp.float32)
+        newp = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(step=step, mu=new_mu, nu=new_nu)
+
+
+def sgd_update(grads: PyTree, params: PyTree, lr) -> PyTree:
+    """Plain SGD step (the paper's client-side update, Algorithm 1 line 18)."""
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params,
+        grads,
+    )

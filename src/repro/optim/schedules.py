@@ -1,0 +1,31 @@
+"""Learning-rate schedules as plain callables step -> lr (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def schedule(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return schedule
+
+
+def cosine_decay(lr: float, decay_steps: int, final_ratio: float = 0.1):
+    def schedule(step):
+        frac = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_ratio + (1.0 - final_ratio) * cos)
+
+    return schedule
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, final_ratio: float = 0.1):
+    cos = cosine_decay(lr, max(1, decay_steps - warmup_steps), final_ratio)
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return schedule

@@ -1,0 +1,8 @@
+from repro.sharding.specs import (
+    activation_rules,
+    batch_spec,
+    decode_state_spec,
+    param_spec_tree,
+)
+
+__all__ = ["activation_rules", "batch_spec", "decode_state_spec", "param_spec_tree"]

@@ -1,0 +1,196 @@
+"""Per-architecture PartitionSpec rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+    - batch dims shard over ("pod", "data")
+    - weight feature dims shard over "model" (tensor parallel): column for
+      in-projections, row for out-projections; MoE expert axis over "model"
+    - FSDP (train mode): the non-"model" weight dim additionally shards over
+      "data" (ZeRO-style); "pod" replicates weights (pure DP across pods)
+    - long_500k (batch=1): the KV-cache/sequence dim shards over "data"
+
+Rules are name-based on the trailing dims of each leaf; leading stacked-unit
+axes (scan-over-layers) and the MoE expert axis are padded with the right
+prefix. Non-divisible cases fall back to replication (checked against the
+actual mesh axis sizes) — e.g. arctic's 56 heads never constrain us because
+we shard feature dims, not head counts (DESIGN.md §6.5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# trailing-dims rule per leaf name. "F" = fsdp axis ("data" in train mode,
+# else None); "M" = "model".
+_RULES_2D = {
+    # embeddings / heads
+    "embed": ("M", "F"),
+    "lm_head": ("F", "M"),
+    "pos_emb": (None, "M"),
+    "enc_pos": (None, "M"),
+    # attention
+    "wq": ("F", "M"), "wk": ("F", "M"), "wv": ("F", "M"), "wo": ("M", "F"),
+    # dense mlp
+    "w_in": ("F", "M"), "w_gate": ("F", "M"), "w_out": ("M", "F"),
+    # rwkv time-mix / channel-mix
+    "wr": ("F", "M"), "wg": ("F", "M"),
+    "wck": ("F", "M"), "wcv": ("M", "F"), "wcr": ("F", "M"),
+    "mix_w1": (None, None), "decay_w1": (None, None), "decay_w2": (None, None),
+    # griffin
+    "w_rec_in": ("F", "M"), "w_gate_in": ("F", "M"),
+    "w_a": (None, "M"), "w_i": (None, "M"), "conv_w": (None, "M"),
+    # gcn (federated sharded simulator)
+    "w_self0": ("F", "M"), "w_nbr0": ("F", "M"),
+    "w_self1": ("F", "M"), "w_nbr1": ("F", "M"), "w_cls": (None, None),
+}
+
+# MoE expert stacks: (E, d, ff)-shaped, expert axis -> "model"
+_RULES_MOE_3D = {
+    "w_in": ("M", "F", None),
+    "w_gate": ("M", "F", None),
+    "w_out": ("M", None, "F"),
+}
+
+
+def _axis(sym, *, fsdp: bool):
+    if sym == "M":
+        return "model"
+    if sym == "F":
+        return "data" if fsdp else None
+    return sym
+
+
+def _leaf_name(path) -> tuple[str, bool]:
+    keys = [str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path]
+    name = keys[-1] if keys else ""
+    in_moe = "moe" in keys
+    return name, in_moe
+
+
+def _divisible(dim: int | None, axis, mesh: Mesh) -> bool:
+    if axis is None or dim is None:
+        return True
+    sizes = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        sizes *= mesh.shape[a]
+    return dim % sizes == 0
+
+
+def param_spec(path, leaf, mesh: Mesh, *, fsdp: bool) -> P:
+    name, in_moe = _leaf_name(path)
+    shape = leaf.shape
+    if in_moe and name in _RULES_MOE_3D and len(shape) >= 3:
+        rule = _RULES_MOE_3D[name]
+    elif name in _RULES_2D:
+        rule = _RULES_2D[name]
+    else:
+        rule = ()
+    # align rule to trailing dims, pad leading (stacked-unit) dims with None
+    axes = [None] * len(shape)
+    for i, sym in enumerate(rule):
+        pos = len(shape) - len(rule) + i
+        if pos < 0:
+            continue
+        ax = _axis(sym, fsdp=fsdp)
+        if _divisible(shape[pos], ax, mesh):
+            axes[pos] = ax
+    return P(*axes)
+
+
+def param_spec_tree(params_shapes, mesh: Mesh, *, fsdp: bool = False,
+                    profile: str = "tp"):
+    """profile "tp": tensor-parallel rules above (+FSDP for train).
+    profile "dp": replicate all weights; batch shards over every mesh axis —
+    the §Perf H2 fix for small models where TP wastes ICI on weight
+    all-gathers (rwkv6-1.6b: collective term 7.1s -> see EXPERIMENTS.md)."""
+    if profile == "dp":
+        return jax.tree_util.tree_map(lambda leaf: P(), params_shapes)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh, fsdp=fsdp), params_shapes
+    )
+
+
+def param_sharding_tree(params_shapes, mesh: Mesh, *, fsdp: bool = False):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_spec_tree(params_shapes, mesh, fsdp=fsdp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def dp_axes(mesh: Mesh, profile: str = "tp"):
+    """Batch-parallel axes: ("pod","data") when a pod axis exists; the "dp"
+    profile additionally folds the model axis into the batch axes."""
+    axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if profile == "dp":
+        axes = axes + ("model",)
+    return axes
+
+
+def batch_spec(mesh: Mesh, batch_size: int, ndim: int, profile: str = "tp") -> P:
+    """Shard the leading batch dim over dp axes (when divisible)."""
+    axes = dp_axes(mesh, profile)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if batch_size % total == 0:
+        lead = axes if len(axes) > 1 else axes[0]
+    elif batch_size % mesh.shape[axes[-1]] == 0:
+        lead = axes[-1]
+    else:
+        lead = None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def decode_state_spec(path, leaf, mesh: Mesh, batch: int) -> P:
+    """KV caches (U, B, S, Hkv, hd) / recurrent states: shard B over dp axes;
+    batch=1 long-context: shard the cache sequence dim over "data"."""
+    name, _ = _leaf_name(path)
+    shape = leaf.shape
+    axes: list = [None] * len(shape)
+    dp = dp_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if name in ("k", "v", "xk", "xv") and len(shape) >= 4:
+        # (..., B, S, Hkv, hd)
+        b_pos = len(shape) - 4
+        s_pos = len(shape) - 3
+        if shape[b_pos] % total == 0:
+            axes[b_pos] = dp if len(dp) > 1 else dp[0]
+        elif shape[b_pos] % mesh.shape[dp[-1]] == 0:
+            axes[b_pos] = dp[-1]
+        elif shape[s_pos] % mesh.shape["data"] == 0:
+            axes[s_pos] = "data"   # long-context: sequence-shard the cache
+        if shape[-2] % mesh.shape["model"] == 0 and shape[-2] >= mesh.shape["model"]:
+            axes[-2] = "model"     # kv heads over model axis when they fit
+        return P(*axes)
+    # recurrent states: (..., B, ...) — find a batch-sized dim to shard
+    for pos in range(len(shape)):
+        if shape[pos] == batch and batch % mesh.shape[dp[-1]] == 0:
+            axes[pos] = dp[-1]
+            break
+    return P(*axes)
+
+
+def activation_rules(mesh: Mesh, *, train: bool, profile: str = "tp") -> dict:
+    """Logical-axis -> mesh-axis map consumed by shard_activation()."""
+    dp = dp_axes(mesh, profile)
+    batch_ax = dp if len(dp) > 1 else dp[0]
+    if profile == "dp":
+        return {"batch": batch_ax, "seq": None, "heads": None, "kv_heads": None,
+                "ff": None, "embed": None, "vocab": None, "experts": None,
+                "boundary_seq": None}
+    return {
+        "batch": batch_ax,
+        "seq": None,
+        "heads": "model",
+        "kv_heads": None,
+        "ff": "model",
+        "embed": None,
+        "vocab": "model",
+        "experts": "model",
+        # layer-boundary activations: sequence-parallel over the model axis
+        # during training (remat residuals shrink x model-axis; §Perf H3.3)
+        "boundary_seq": "model" if train else None,
+    }

@@ -1,0 +1,1 @@
+"""Shared utilities: pytree helpers, HLO analysis, roofline math."""

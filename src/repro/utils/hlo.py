@@ -1,0 +1,119 @@
+"""Extract collective-communication byte counts from lowered/compiled HLO.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+traffic, so the roofline's collective term is derived here by parsing the HLO
+text: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes the byte size of its operands.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  bf16[16,4096,512]{2,1,0}   or  f32[] or  (f32[8,128], u32[8])
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+# HLO instruction line:  %name = <shape(s)> op-name(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", re.MULTILINE
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes for all array shapes appearing in ``shape_text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Byte totals per collective kind plus op counts."""
+
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.count_by_kind[k]} bytes={self.bytes_by_kind[k]:,}"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "(no collectives)"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse HLO text and sum output-shape bytes of every collective op.
+
+    We count the *result* shape of each collective (the data that actually
+    crosses links, modulo algorithm factors); `-start` variants are counted,
+    matching `-done` pairs are skipped to avoid double counting.
+    """
+    stats = CollectiveStats()
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVE_KINDS:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+            if op == c + "-done":  # counted at -start
+                kind = None
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(shape_text)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def count_op(hlo_text: str, op_name: str) -> int:
+    """Count instructions of a given HLO op (e.g. 'fusion', 'transpose')."""
+    pat = re.compile(rf"=\s*[^=]*?\b{re.escape(op_name)}\(")
+    return len(pat.findall(hlo_text))
+
+
+def duplicate_fusion_ratio(hlo_text: str) -> float:
+    """Crude remat indicator: ratio of dot ops to unique dot shapes.
+
+    Remat-inserted recompute shows up as the same dot shape appearing many
+    times. Ratio 1.0 = no duplication.
+    """
+    shapes = re.findall(r"=\s*(\S+)\s+dot\(", hlo_text)
+    if not shapes:
+        return 1.0
+    from collections import Counter
+
+    c = Counter(shapes)
+    return len(shapes) / max(1, len(c))

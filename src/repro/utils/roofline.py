@@ -1,0 +1,98 @@
+"""Roofline model for TPU v5e meshes.
+
+Three terms per (arch, shape, mesh), all in seconds (lower bound estimates):
+
+    compute    = HLO_FLOPs       / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes       / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+pre-partition totals -> divided by chip count); collective_bytes comes from
+``utils.hlo.collective_stats`` over the post-SPMD module (per-partition) so it
+is multiplied back by chips before normalising -- both conventions are handled
+by the caller passing ``per_device`` flags.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+# TPU v5e hardware constants (per chip), per assignment.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # whole-program FLOPs (all chips)
+    hlo_bytes: float              # whole-program HBM bytes accessed
+    collective_bytes: float       # whole-program bytes crossing ICI
+    model_flops: float            # 6*N*D (dense) or 6*N_active*D analytic
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs -- how much compiled compute is 'useful'."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Model-FLOPs utilisation if the dominant term were the runtime."""
+        t = self.bound_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS_BF16)
+
+    def row(self) -> dict:
+        d = asdict(self)
+        d.update(
+            dominant=self.dominant,
+            bound_s=self.bound_s,
+            useful_flops_ratio=self.useful_flops_ratio,
+            mfu_upper_bound=self.mfu_upper_bound,
+        )
+        return d
+
+    def pretty(self) -> str:
+        return (
+            f"{self.arch:18s} {self.shape:12s} {self.mesh:10s} "
+            f"comp={self.compute_s*1e3:9.3f}ms mem={self.memory_s*1e3:9.3f}ms "
+            f"coll={self.collective_s*1e3:9.3f}ms dom={self.dominant:10s} "
+            f"useful={self.useful_flops_ratio:6.3f} mfu<= {self.mfu_upper_bound*100:5.1f}%"
+        )
+
+
+def model_flops_dense(n_params: int, tokens: int) -> float:
+    """Standard 6*N*D estimate for a dense decoder train step."""
+    return 6.0 * n_params * tokens
+
+
+def model_flops_forward(n_params: int, tokens: int) -> float:
+    """2*N*D for inference (prefill/decode) steps."""
+    return 2.0 * n_params * tokens

@@ -1,0 +1,138 @@
+"""Pytree helpers used across the framework (no flax/optax in container)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return tree_map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return tree_map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, elementwise over matching pytrees."""
+    return tree_map(lambda a, b: alpha * a + b, x, y)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    """Inner product between two pytrees."""
+    leaves = tree_map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_l2_norm(tree: PyTree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_count_params(tree: PyTree) -> int:
+    return int(sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(
+        sum(math.prod(x.shape) * jnp.dtype(x.dtype).itemsize for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return tree_map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_isfinite(tree: PyTree):
+    """True iff every floating leaf is finite everywhere."""
+    leaves = [
+        jnp.all(jnp.isfinite(x))
+        for x in jax.tree_util.tree_leaves(tree)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+    ]
+    if not leaves:
+        return jnp.bool_(True)
+    return jnp.stack(leaves).all()
+
+
+def tree_shapes(tree: PyTree) -> PyTree:
+    return tree_map(lambda x: tuple(x.shape), tree)
+
+
+def tree_to_shape_dtype(tree: PyTree, sharding_fn: Callable | None = None) -> PyTree:
+    """Convert a tree of arrays (or ShapeDtypeStructs) to ShapeDtypeStructs.
+
+    ``sharding_fn(path, leaf)`` may attach a sharding; used by the dry-run.
+    """
+
+    def conv(path, x):
+        sharding = sharding_fn(path, x) if sharding_fn is not None else None
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sharding)
+
+    return jax.tree_util.tree_map_with_path(conv, tree)
+
+
+def tree_random_like(key, tree: PyTree, scale: float = 0.02) -> PyTree:
+    """Fill a ShapeDtypeStruct tree with random normals (tests/examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    new = [
+        jax.random.normal(k, l.shape, l.dtype) * scale
+        if jnp.issubdtype(l.dtype, jnp.floating)
+        else jnp.zeros(l.shape, l.dtype)
+        for k, l in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def global_norm_clip(tree: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    norm = tree_l2_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tree_scale(tree, scale), norm
+
+
+def format_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"
+
+
+def format_count(n: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}E"
+
+
+def stable_hash(s: str) -> int:
+    """Deterministic 32-bit hash (python hash() is salted per-process)."""
+    h = 2166136261
+    for c in s.encode():
+        h = ((h ^ c) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def np_one_hot(x: np.ndarray, n: int) -> np.ndarray:
+    out = np.zeros((*x.shape, n), dtype=np.float32)
+    np.put_along_axis(out, x[..., None], 1.0, axis=-1)
+    return out

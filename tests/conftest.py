@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def small_fed():
+    """A small federated graph shared by the federated tests."""
+    from repro.graph.data import make_dataset
+    from repro.federated.partition import partition_graph
+
+    g = make_dataset("pubmed", scale=32, seed=0)
+    fed = partition_graph(g, 8, alpha=0.5, seed=0)
+    return g, fed

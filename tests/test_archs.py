@@ -1,0 +1,198 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned family,
+one forward + one train step + one decode step on CPU; shapes + no NaNs.
+Plus prefill/decode consistency and chunked-attention parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models import lm
+from repro.optim import adamw_init
+from repro.optim.schedules import constant
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype) * 0.02
+    if cfg.n_encoder_layers:
+        batch["enc_frames"] = jax.random.normal(
+            ks[3], (B, cfg.encoder_seq_len, cfg.d_model), cfg.jnp_dtype) * 0.02
+    return batch
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    expected = {
+        "gemma3-12b", "dbrx-132b", "deepseek-67b", "nemotron-4-15b",
+        "llama3-405b", "arctic-480b", "whisper-large-v3", "rwkv6-1.6b",
+        "recurrentgemma-2b", "internvl2-2b",
+    }
+    assert set(ARCHS) == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_dims(arch):
+    """Full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    # layer pattern covers n_layers exactly
+    assert cfg.n_units * len(cfg.block_pattern) + len(cfg.remainder_pattern) == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_is_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers == 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(key, cfg)
+    batch = _batch(cfg, key)
+    B, S = batch["tokens"].shape
+
+    logits, aux = lm.lm_forward(params, cfg, batch["tokens"],
+                                image_embeds=batch.get("image_embeds"),
+                                enc_frames=batch.get("enc_frames"))
+    total = S + (cfg.n_image_tokens or 0)
+    assert logits.shape == (B, total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    step = jax.jit(lm.make_train_step(cfg, constant(1e-3)))
+    p2, o2, metrics = step(params, adamw_init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_reduces_loss(arch, key):
+    """A few steps on a repeated batch must reduce the loss (learnable)."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(key, cfg)
+    batch = _batch(cfg, key)
+    step = jax.jit(lm.make_train_step(cfg, constant(3e-3)))
+    opt = adamw_init(params)
+    first = None
+    for _ in range(5):
+        params, opt, m = step(params, opt, batch)
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch, key):
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(key, cfg)
+    B, max_len = 2, 32
+    if cfg.n_encoder_layers:
+        enc_out = jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.d_model), cfg.jnp_dtype) * 0.02
+        state = lm.init_decode_state(params, cfg, B, max_len, enc_out=enc_out)
+    else:
+        state = lm.init_decode_state(params, cfg, B, max_len)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, state2 = lm.decode_step(params, cfg, state, tok, jnp.asarray(3))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "gemma3-12b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b", "whisper-large-v3",
+                                  "internvl2-2b", "dbrx-132b"])
+def test_prefill_decode_consistency(arch, key):
+    """prefill(S) + decode(token S) == full forward over S+1 tokens."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(key, cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.n_image_tokens:
+        kw["image_embeds"] = jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype) * 0.02
+    if cfg.n_encoder_layers:
+        kw["enc_frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model), cfg.jnp_dtype) * 0.02
+    logits_full, _ = lm.lm_forward(params, cfg, tokens, **kw)
+    gt = logits_full[:, -1]
+    _, state = lm.lm_prefill(params, cfg, tokens[:, :S], max_len=32, **kw)
+    P = cfg.n_image_tokens or 0
+    dec, _ = lm.decode_step(params, cfg, state, tokens[:, S:S + 1], jnp.asarray(P + S))
+    scale = float(jnp.max(jnp.abs(gt))) + 1e-6
+    err = float(jnp.max(jnp.abs(gt - dec[:, 0])))
+    assert err < 2e-2 * max(scale, 1.0), f"prefill/decode mismatch: {err} vs scale {scale}"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "gemma3-12b"])
+def test_chunked_attention_parity(arch, key):
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(key, cfg)
+    tokens = jax.random.randint(key, (2, 13), 0, cfg.vocab_size)
+    full, _ = lm.lm_forward(params, cfg, tokens)
+    cfg2 = dataclasses.replace(cfg, attn_impl="chunked", attn_chunk_size=4)
+    chunked, _ = lm.lm_forward(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(chunked, np.float32),
+                               np.asarray(full, np.float32), atol=2e-5)
+
+
+def test_scan_vs_unrolled_parity(key):
+    """scan-over-layers and python-unrolled layers are numerically identical."""
+    cfg = get_smoke_config("gemma3-12b")
+    params = lm.init_lm(key, cfg)
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    a, _ = lm.lm_forward(params, cfg, tokens)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    b, _ = lm.lm_forward(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_param_count_analytic_close(key):
+    """Analytic param_count matches the real tree within 3%."""
+    from repro.utils.tree import tree_count_params
+    for arch in ["deepseek-67b", "rwkv6-1.6b", "recurrentgemma-2b", "dbrx-132b"]:
+        cfg = get_smoke_config(arch)
+        params = lm.init_lm(key, cfg)
+        real = tree_count_params(params)
+        analytic = cfg.param_count()
+        assert abs(real - analytic) / real < 0.03, (arch, real, analytic)
+
+
+def test_full_config_param_counts_sane():
+    """Full-config analytic parameter counts land near the advertised sizes."""
+    expect = {
+        "llama3-405b": (380e9, 440e9),
+        "dbrx-132b": (110e9, 150e9),
+        "deepseek-67b": (60e9, 75e9),
+        "arctic-480b": (380e9, 520e9),
+        "rwkv6-1.6b": (1.2e9, 2.2e9),
+        "recurrentgemma-2b": (2.0e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,161 @@
+"""Unit + property tests for the FedAIS core modules (the paper's math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import (
+    importance_probs,
+    loss_delta_scores,
+    sample_batch,
+    sampling_variance,
+    uniform_probs,
+)
+from repro.core.sync import adaptive_tau, delay_model, error_bound, tau_theoretical
+from repro.core.variance import minibatch_variance, theorem1_bound
+from repro.core.historical import push_embeddings, staleness_metrics
+
+
+# ---------------------------------------------------------------------------
+# importance sampling (Eq. 7-8)
+# ---------------------------------------------------------------------------
+
+def test_importance_probs_normalised(rng):
+    scores = jnp.asarray(rng.random(100), jnp.float32)
+    mask = jnp.asarray(rng.random(100) < 0.7, jnp.float32)
+    p = importance_probs(scores, mask)
+    assert abs(float(p.sum()) - 1.0) < 1e-5
+    assert float(p.min()) >= 0.0
+    # masked entries have zero probability
+    assert float((p * (1 - mask)).sum()) == 0.0
+
+
+@given(n=st.integers(4, 200))
+@settings(max_examples=20, deadline=None)
+def test_importance_probs_property(n):
+    rng = np.random.default_rng(n)
+    scores = jnp.asarray(rng.random(n), jnp.float32)
+    mask = jnp.ones(n, jnp.float32)
+    p = importance_probs(scores, mask)
+    assert abs(float(p.sum()) - 1.0) < 1e-4
+    # monotone: higher score -> higher probability
+    i, j = int(jnp.argmax(scores)), int(jnp.argmin(scores))
+    assert float(p[i]) >= float(p[j])
+
+
+def test_loss_delta_cold_start():
+    """Never-seen nodes (prev=-1) score by their current loss."""
+    curr = jnp.asarray([1.0, 2.0, 3.0])
+    prev = jnp.asarray([-1.0, 1.5, -1.0])
+    mask = jnp.ones(3)
+    s = loss_delta_scores(curr, prev, mask)
+    np.testing.assert_allclose(np.asarray(s), [1.0, 0.5, 3.0])
+
+
+def test_sample_batch_distinct_and_masked(key):
+    probs = jnp.asarray([0.5, 0.3, 0.2, 0.0, 0.0])
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    idx, valid = sample_batch(key, probs, 3, mask)
+    idx_np = np.asarray(idx)
+    assert len(set(idx_np.tolist())) == 3          # distinct
+    assert set(idx_np[np.asarray(valid)]) <= {0, 1, 2}  # masked never valid
+
+
+def test_sample_batch_respects_probabilities(key):
+    """High-probability nodes are drawn far more often (statistical)."""
+    probs = jnp.asarray([0.9, 0.05, 0.05] + [0.0] * 7)
+    probs = probs / probs.sum()
+    mask = (probs > 0).astype(jnp.float32)
+    counts = np.zeros(10)
+    for i in range(200):
+        idx, valid = sample_batch(jax.random.fold_in(key, i), probs, 1, mask)
+        counts[int(idx[0])] += 1
+    assert counts[0] > 100   # node 0 dominates
+
+
+def test_importance_sampling_reduces_eq7_objective(rng):
+    """The Eq. 7 variance objective is lower under p ∝ ||grad|| than uniform
+    for skewed gradient norms — the paper's core sampling claim."""
+    g = jnp.asarray(rng.pareto(1.5, 200) + 0.01, jnp.float32)   # heavy tail
+    mask = jnp.ones(200, jnp.float32)
+    p_imp = importance_probs(g, mask)
+    p_uni = uniform_probs(mask)
+    v_imp = float(sampling_variance(p_imp, g, mask))
+    v_uni = float(sampling_variance(p_uni, g, mask))
+    assert v_imp < v_uni
+
+
+# ---------------------------------------------------------------------------
+# adaptive sync (Eq. 9-11)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_tau_decreases_with_loss():
+    """Eq. 11: tau decays as sqrt(F_t/F_0) — more sync as model converges."""
+    taus = [adaptive_tau(f, 4.0, tau0=8) for f in (4.0, 2.0, 1.0, 0.25, 0.01)]
+    assert taus[0] == 8
+    assert all(a >= b for a, b in zip(taus, taus[1:]))
+    assert taus[-1] == 1
+
+
+def test_adaptive_tau_robust():
+    assert adaptive_tau(float("nan"), 1.0, 4) == 4
+    assert adaptive_tau(1.0, 0.0, 4) == 4
+    assert adaptive_tau(100.0, 1.0, 4, tau_max=16) == 16
+
+
+@given(f0=st.floats(0.5, 10), o=st.floats(0.1, 100), zeta2=st.floats(0.01, 10),
+       eta=st.floats(1e-4, 0.1))
+@settings(max_examples=30, deadline=None)
+def test_eq10_minimises_error_bound(f0, o, zeta2, eta):
+    """The Eq. 10 tau* should (approximately) minimise the Eq. 9 bound over
+    integer tau — verified by brute force."""
+    lam, c_total, c = 1.0, 1000.0, 1.0
+    tau_star = tau_theoretical(f0, 0.0, o, eta, c_total, lam, zeta2)
+    taus = np.arange(1, 200)
+    vals = [error_bound(f0, 0.0, eta, lam, zeta2, c, o, t, c_total) for t in taus]
+    best = taus[int(np.argmin(vals))]
+    if 1 <= tau_star <= 199:
+        # continuous optimum within 1 of the integer argmin (convexity)
+        assert abs(best - tau_star) <= max(2.0, 0.35 * tau_star)
+
+
+def test_delay_model_speedup():
+    d = delay_model([1.0, 1.2, 0.9], o=5.0, tau=5)
+    assert d["c_syn"] == pytest.approx(6.2)
+    assert d["c_avg"] == pytest.approx(2.2)
+    assert d["speedup"] > 2.0
+
+
+# ---------------------------------------------------------------------------
+# variance bounds (Thm. 1) + historical store
+# ---------------------------------------------------------------------------
+
+def test_theorem1_bound_grows_with_depth():
+    b2 = theorem1_bound(0.9, 0.9, 5.0, 2)
+    b3 = theorem1_bound(0.9, 0.9, 5.0, 3)
+    assert b3 > b2 > 0
+
+
+def test_minibatch_variance_matches_eq7(rng):
+    g = jnp.asarray(rng.random(50) + 0.1, jnp.float32)
+    mask = jnp.ones(50, jnp.float32)
+    p = importance_probs(g, mask)
+    v = float(minibatch_variance(g, p, mask))
+    assert np.isfinite(v) and v > 0
+
+
+def test_push_embeddings_and_staleness():
+    hist = jnp.zeros((10, 4))
+    age = jnp.asarray([5] * 10, jnp.int32)
+    batch = jnp.asarray([1, 3, 5])
+    vals = jnp.ones((3, 4))
+    valid = jnp.asarray([True, True, False])
+    h2, age2 = push_embeddings(hist, age, batch, vals, valid)
+    np.testing.assert_allclose(np.asarray(h2[1]), 1.0)
+    np.testing.assert_allclose(np.asarray(h2[3]), 1.0)
+    np.testing.assert_allclose(np.asarray(h2[5]), 0.0)   # invalid: unchanged
+    assert int(age2[1]) == 0 and int(age2[3]) == 0
+    assert int(age2[0]) == 6                             # others aged
+    m = staleness_metrics(age2, jnp.ones(10))
+    assert float(m["mean_age"]) > 0

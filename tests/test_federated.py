@@ -1,0 +1,211 @@
+"""Integration + property tests for the federated runtime (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federated.baselines import method_config
+from repro.federated.partition import partition_graph
+from repro.federated.server import fedavg, fedavg_weighted, macro_f1, macro_ovr_auc
+from repro.federated.simulator import run_federated
+from repro.graph.data import DATASET_SPECS, downsample_edges, make_dataset
+from repro.models.gcn import gcn_batch_forward, gcn_full_forward, gcn_init, per_node_loss
+
+
+# ---------------------------------------------------------------------------
+# graph substrate
+# ---------------------------------------------------------------------------
+
+def test_dataset_specs_match_table1():
+    assert DATASET_SPECS["reddit"].n_nodes == 232_965
+    assert DATASET_SPECS["amazon2m"].n_nodes == 2_449_029
+    assert DATASET_SPECS["yelp"].n_classes == 100
+    assert DATASET_SPECS["pubmed"].n_features == 500
+
+
+def test_make_dataset_deterministic():
+    a = make_dataset("pubmed", scale=32, seed=3)
+    b = make_dataset("pubmed", scale=32, seed=3)
+    np.testing.assert_array_equal(a.edges, b.edges)
+    np.testing.assert_allclose(a.features, b.features)
+
+
+def test_downsample_edges():
+    g = make_dataset("pubmed", scale=32, seed=0)
+    g2 = downsample_edges(g, keep=0.5, seed=0)
+    assert 0.35 * len(g.edges) < len(g2.edges) < 0.65 * len(g.edges)
+
+
+def test_splits_disjoint_and_complete():
+    g = make_dataset("coauthor", scale=32, seed=0)
+    total = g.train_mask.astype(int) + g.val_mask.astype(int) + g.test_mask.astype(int)
+    assert (total == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# partition
+# ---------------------------------------------------------------------------
+
+def test_partition_preserves_nodes(small_fed):
+    g, fed = small_fed
+    assert int(fed.node_mask.sum()) == g.n_nodes
+    ids = fed.global_ids[fed.node_mask > 0]
+    assert sorted(ids.tolist()) == list(range(g.n_nodes))
+
+
+def test_partition_ghost_consistency(small_fed):
+    """Every ghost points at a real row of its owner, never at self."""
+    g, fed = small_fed
+    K = fed.n_clients
+    for k in range(K):
+        live = fed.ghost_mask[k] > 0
+        owners = fed.ghost_owner[k][live]
+        rows = fed.ghost_row[k][live]
+        assert (owners != k).all()
+        assert ((owners >= 0) & (owners < K)).all()
+        for o, r in zip(owners, rows):
+            assert fed.node_mask[o, r] == 1.0
+
+
+def test_partition_noniid_skew():
+    """Dirichlet(0.1) must concentrate labels much more than iid."""
+    g = make_dataset("coauthor", scale=32, seed=0)
+    iid = partition_graph(g, 8, alpha=None, seed=0)
+    non = partition_graph(g, 8, alpha=0.1, seed=0)
+
+    def label_entropy(fed):
+        ents = []
+        for k in range(fed.n_clients):
+            lbl = fed.labels[k][fed.node_mask[k] > 0]
+            if len(lbl) < 2:
+                continue
+            p = np.bincount(lbl, minlength=g.n_classes) / len(lbl)
+            p = p[p > 0]
+            ents.append(-(p * np.log(p)).sum())
+        return np.mean(ents)
+
+    assert label_entropy(non) < label_entropy(iid) - 0.2
+
+
+def test_cross_edges_counted(small_fed):
+    g, fed = small_fed
+    assert fed.n_cross_edges > 0
+    assert fed.ghost_mask.sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# GCN with historical embeddings
+# ---------------------------------------------------------------------------
+
+def test_gcn_batch_vs_full_consistency(key, rng):
+    """With ALL nodes in batch and exact ghost tables, the pruned batch
+    forward must equal the exact full forward on an isolated client."""
+    n, F, C = 20, 8, 3
+    params = gcn_init(key, F, C)
+    feats = jnp.asarray(rng.standard_normal((n, F)), jnp.float32)
+    # within-client-only adjacency
+    idx = jnp.asarray(rng.integers(0, n, (n, 4)), jnp.int32)
+    mask = jnp.asarray((rng.random((n, 4)) < 0.8), jnp.float32)
+    ghost_feat = jnp.zeros((1, F))
+    hist1 = jnp.zeros((n + 1, 256))
+    logits_b, h1, _ = gcn_batch_forward(params, feats, ghost_feat, hist1,
+                                        idx, mask, jnp.arange(n))
+    logits_f = gcn_full_forward(params, feats, idx, mask)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_f), atol=1e-5)
+
+
+def test_historical_gradient_isolation(key, rng):
+    """Gradients must not flow through historical (out-of-batch) entries."""
+    n, F, C = 10, 4, 2
+    params = gcn_init(key, F, C)
+    feats = jnp.asarray(rng.standard_normal((n, F)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, 3)), jnp.int32)
+    mask = jnp.ones((n, 3), jnp.float32)
+    hist1 = jnp.asarray(rng.standard_normal((n + 1, 256)), jnp.float32)
+    batch = jnp.asarray([0, 1, 2])
+
+    def loss(h):
+        logits, _, _ = gcn_batch_forward(params, feats, jnp.zeros((1, F)), h,
+                                         idx, mask, batch)
+        return per_node_loss(logits, jnp.zeros(3, jnp.int32)).sum()
+
+    g = jax.grad(loss)(hist1)
+    assert float(jnp.abs(g).sum()) == 0.0   # stop_gradient on history
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+def test_fedavg_mean():
+    stacked = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    out = fedavg(stacked)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 3.0])
+
+
+def test_fedavg_weighted():
+    stacked = {"w": jnp.asarray([[0.0], [10.0]])}
+    out = fedavg_weighted(stacked, jnp.asarray([3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5])
+
+
+def test_macro_metrics_perfect():
+    labels = np.asarray([0, 1, 2, 0])
+    logits = np.eye(3)[labels] * 10.0
+    assert macro_f1(labels, labels, 3) == 1.0
+    assert macro_ovr_auc(labels, logits) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end federated runs (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedais", "fedall", "fedrandom", "fedpns",
+                                    "fedgraph", "fedsage+", "fedais1", "fedais2"])
+def test_methods_run_and_learn(small_fed, method):
+    g, fed = small_fed
+    res = run_federated(g, fed, method_config(method), rounds=4,
+                        clients_per_round=4, seed=0)
+    assert res.final["acc"] > 1.5 / g.n_classes   # better than chance
+    assert np.isfinite(res.final["loss"])
+    assert res.final["comm_total_bytes"] > 0
+
+
+def test_fedais_learns_and_saves_embed_comm(small_fed):
+    """FedAIS must beat FedAll on embedding-sync bytes at equal rounds."""
+    g, fed = small_fed
+    ais = run_federated(g, fed, method_config("fedais", tau0=4),
+                        rounds=6, clients_per_round=4, seed=0)
+    fall = run_federated(g, fed, method_config("fedall"),
+                         rounds=6, clients_per_round=4, seed=0)
+    assert ais.final["comm_embed_bytes"] < fall.final["comm_embed_bytes"]
+    assert ais.final["acc"] > 0.5 * fall.final["acc"]
+
+
+def test_adaptive_tau_trajectory(small_fed):
+    """tau must never increase as test loss decreases (Eq. 11 trajectory)."""
+    g, fed = small_fed
+    res = run_federated(g, fed, method_config("fedais", tau0=8),
+                        rounds=6, clients_per_round=4, seed=0)
+    taus = res.history["tau"]
+    losses = res.history["test_loss"]
+    for i in range(1, len(taus)):
+        if losses[i] <= min(losses[:i]):
+            assert taus[i] <= max(taus[:i])
+
+
+def test_fedlocal_ignores_ghosts(small_fed):
+    g, fed = small_fed
+    res = run_federated(g, fed, method_config("fedlocal"), rounds=3,
+                        clients_per_round=4, seed=0)
+    assert res.final["comm_embed_bytes"] == 0.0
+
+
+def test_simulator_deterministic(small_fed):
+    g, fed = small_fed
+    a = run_federated(g, fed, method_config("fedais"), rounds=3,
+                      clients_per_round=3, seed=42)
+    b = run_federated(g, fed, method_config("fedais"), rounds=3,
+                      clients_per_round=3, seed=42)
+    assert a.history["test_acc"] == b.history["test_acc"]
+    assert a.final["comm_total_bytes"] == b.final["comm_total_bytes"]

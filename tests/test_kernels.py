@@ -1,0 +1,158 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True) +
+hypothesis property sweeps over shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spmm.ops import adjacency_from_neighbors, block_spmm, neighbor_mean
+from repro.kernels.spmm.ref import neighbor_mean_ref, spmm_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+# ---------------------------------------------------------------------------
+# spmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,d", [(64, 64, 32), (100, 130, 70), (256, 256, 128), (33, 257, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_matches_ref(rng, n, m, d, dtype):
+    a = (rng.random((n, m)) < 0.1).astype(np.float32) * rng.random((n, m)).astype(np.float32)
+    x = rng.standard_normal((m, d)).astype(np.float32)
+    a_j, x_j = jnp.asarray(a, dtype), jnp.asarray(x, dtype)
+    got = block_spmm(a_j, x_j)
+    want = spmm_ref(a_j, x_j)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_spmm_block_skipping_is_exact(rng):
+    """Zero tiles are skipped; result must still be exact."""
+    a = np.zeros((256, 256), np.float32)
+    a[:64, :64] = rng.random((64, 64))          # single live tile
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    got = block_spmm(jnp.asarray(a), jnp.asarray(x), block_n=64, block_m=64, block_d=64)
+    np.testing.assert_allclose(np.asarray(got), a @ x, atol=1e-4)
+
+
+@given(n=st.integers(8, 96), k=st.integers(1, 12), d=st.integers(4, 48))
+@settings(max_examples=15, deadline=None)
+def test_neighbor_mean_property(n, k, d):
+    rng = np.random.default_rng(n * 1000 + k * 10 + d)
+    idx = rng.integers(0, n, (n, k)).astype(np.int32)
+    mask = (rng.random((n, k)) < 0.6).astype(np.float32)
+    f = rng.standard_normal((n, d)).astype(np.float32)
+    got = neighbor_mean(jnp.asarray(f), jnp.asarray(idx), jnp.asarray(mask))
+    want = neighbor_mean_ref(jnp.asarray(f), jnp.asarray(idx), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_adjacency_row_normalised(rng):
+    idx = rng.integers(0, 32, (16, 6)).astype(np.int32)
+    mask = (rng.random((16, 6)) < 0.8).astype(np.float32)
+    a = np.asarray(adjacency_from_neighbors(jnp.asarray(idx), jnp.asarray(mask), 32))
+    rows = a.sum(-1)
+    has_nbrs = mask.sum(-1) > 0
+    np.testing.assert_allclose(rows[has_nbrs], 1.0, atol=1e-5)
+    np.testing.assert_allclose(rows[~has_nbrs], 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hkv,hd", [(2, 64, 4, 2, 32), (1, 128, 8, 8, 16), (2, 96, 4, 1, 64)])
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_attention_matches_ref(rng, b, s, h, hkv, hd, window):
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(rng, dtype, tol):
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 32)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 32)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 32)), dtype)
+    got = flash_attention(q, k, v, block_q=16, block_k=16)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(s=st.integers(4, 80), h=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
+       hd=st.sampled_from([8, 16]))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(s, h, g, hd):
+    """Arbitrary (ragged) seq lens + GQA group sizes match the oracle."""
+    if h % g:
+        return
+    rng = np.random.default_rng(s * 100 + h * 10 + hd)
+    q = jnp.asarray(rng.standard_normal((1, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, s, h // g, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, s, h // g, hd)), jnp.float32)
+    got = flash_attention(q, k, v, block_q=16, block_k=16)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_causality(rng):
+    """Changing future keys must not change past outputs."""
+    q = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.float32)
+    out1 = flash_attention(q, k, v, block_q=8, block_k=8)
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-99.0)
+    out2 = flash_attention(q, k2, v2, block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(out1[:, :20]), np.asarray(out2[:, :20]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,n", [(2, 32, 2, 16), (1, 100, 4, 32), (2, 64, 1, 8)])
+def test_wkv6_matches_ref(rng, b, t, h, n):
+    r, k, v = [jnp.asarray(rng.standard_normal((b, t, h, n)) * 0.5, jnp.float32) for _ in range(3)]
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((b, t, h, n)) * 0.5)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, n)) * 0.1, jnp.float32)
+    y, s = wkv6(r, k, v, w, u, chunk=16)
+    yr, sr = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-5)
+
+
+@given(t=st.integers(3, 70), n=st.sampled_from([8, 16]), chunk=st.sampled_from([8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_wkv6_padding_property(t, n, chunk):
+    """Non-multiple T is padded with identity steps: outputs+state exact."""
+    rng = np.random.default_rng(t * 31 + n)
+    r, k, v = [jnp.asarray(rng.standard_normal((1, t, 2, n)) * 0.3, jnp.float32) for _ in range(3)]
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((1, t, 2, n)))), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((2, n)) * 0.1, jnp.float32)
+    y, s = wkv6(r, k, v, w, u, chunk=chunk)
+    yr, sr = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-5)
+
+
+def test_wkv6_state_streaming(rng):
+    """Running two halves with carried state == running the whole sequence."""
+    b, t, h, n = 1, 32, 2, 16
+    r, k, v = [jnp.asarray(rng.standard_normal((b, t, h, n)) * 0.4, jnp.float32) for _ in range(3)]
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((b, t, h, n)))), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, n)) * 0.1, jnp.float32)
+    y_full, _ = wkv6_ref(r, k, v, w, u)
+    y1, s1 = wkv6_ref(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u)
+    y2, _ = wkv6_ref(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, state0=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)

@@ -1,0 +1,62 @@
+"""Tests for the centralized graph-sampling families (related-work section)."""
+import numpy as np
+import pytest
+
+from repro.graph.csr import build_padded_neighbors, degree_stats
+from repro.graph.data import make_dataset
+from repro.graph.sampling import layer_wise_sample, node_wise_sample, subgraph_sample
+
+
+@pytest.fixture(scope="module")
+def padded():
+    g = make_dataset("pubmed", scale=64, seed=1)
+    idx, mask = build_padded_neighbors(g.adjacency_lists(), 16)
+    return g, idx, mask
+
+
+def test_build_padded_neighbors_consistency(padded):
+    g, idx, mask = padded
+    assert idx.shape == mask.shape
+    assert idx.shape[0] == g.n_nodes
+    # masked slots index valid nodes
+    assert (idx[mask > 0] < g.n_nodes).all()
+    stats = degree_stats(mask)
+    assert 0 < stats["mean"] <= 16
+
+
+def test_node_wise_sample_caps_fanout(padded):
+    g, idx, mask = padded
+    rng = np.random.default_rng(0)
+    new_idx, new_mask = node_wise_sample(idx, mask, fanout=4, rng=rng)
+    assert new_mask.shape[1] == 4
+    assert (new_mask.sum(1) <= 4).all()
+    # sampled neighbors are a subset of the originals
+    for i in range(0, g.n_nodes, max(1, g.n_nodes // 20)):
+        orig = set(idx[i][mask[i] > 0].tolist())
+        kept = set(new_idx[i][new_mask[i] > 0].tolist())
+        assert kept <= orig
+
+
+def test_node_wise_sample_noop_when_fanout_large(padded):
+    g, idx, mask = padded
+    rng = np.random.default_rng(0)
+    new_idx, new_mask = node_wise_sample(idx, mask, fanout=999, rng=rng)
+    np.testing.assert_array_equal(new_idx, idx)
+
+
+def test_layer_wise_sample_budget(padded):
+    g, idx, mask = padded
+    rng = np.random.default_rng(0)
+    _, new_mask = layer_wise_sample(idx, mask, g.n_nodes, budget=g.n_nodes // 4, rng=rng)
+    # only neighbors inside the sampled layer survive
+    assert new_mask.sum() < mask.sum()
+    survivors = np.unique(idx[new_mask > 0])
+    assert len(survivors) <= g.n_nodes // 4
+
+
+def test_subgraph_sample_partition(padded):
+    g, idx, mask = padded
+    rng = np.random.default_rng(0)
+    parts = subgraph_sample(g.edges, g.n_nodes, n_parts=4, rng=rng)
+    assert parts.shape == (g.n_nodes,)
+    assert set(np.unique(parts)) <= {0, 1, 2, 3}
