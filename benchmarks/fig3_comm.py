@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.federated.baselines import method_config
-from repro.federated.simulator import run_federated
+from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup
 
 METHODS = ("fedall", "fedrandom", "fedsage+", "fedpns", "fedgraph", "fedais")
@@ -26,8 +25,8 @@ def run(quick: bool = True) -> list[dict]:
         for m in METHODS:
             mcfg = method_config(m, tau0=4 if m == "fedais" else
                                  (2 if m == "fedpns" else 1))
-            res = run_federated(g, fed, mcfg, rounds=rounds,
-                                clients_per_round=5, seed=0)
+            res = FedEngine(g, fed, mcfg, rounds=rounds,
+                            clients_per_round=5, seed=0).run()
             curves[m] = res
         # target = 95% of the best final accuracy across methods
         target = 0.95 * max(r.final["acc"] for r in curves.values())

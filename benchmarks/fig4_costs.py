@@ -2,8 +2,7 @@
 fixed accuracy target (the 91.77% / 85.59% savings headline)."""
 from __future__ import annotations
 
-from repro.federated.baselines import method_config
-from repro.federated.simulator import run_federated
+from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup
 
 METHODS = ("fedall", "fedrandom", "fedsage+", "fedpns", "fedgraph", "fedais")
@@ -17,8 +16,8 @@ def run(quick: bool = True) -> list[dict]:
     results = {}
     for m in METHODS:
         mcfg = method_config(m, tau0=4 if m == "fedais" else (2 if m == "fedpns" else 1))
-        res = run_federated(g, fed, mcfg, rounds=rounds, clients_per_round=5,
-                            seed=0, target_acc=None)
+        res = FedEngine(g, fed, mcfg, rounds=rounds, clients_per_round=5,
+                        seed=0, target_acc=None).run()
         results[m] = res
     target = 0.9 * max(r.final["acc"] for r in results.values())
     for m, res in results.items():

@@ -2,8 +2,7 @@
 (adaptive sync only) vs full FedAIS."""
 from __future__ import annotations
 
-from repro.federated.baselines import method_config
-from repro.federated.simulator import run_federated
+from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup
 
 ABLATIONS = ("fedall", "fedais1", "fedais2", "fedais")
@@ -14,8 +13,8 @@ def run(quick: bool = True) -> list[dict]:
     rounds = 12 if quick else 40
     rows = []
     for m in ABLATIONS:
-        res = run_federated(g, fed, method_config(m, tau0=4), rounds=rounds,
-                            clients_per_round=5, seed=0)
+        res = FedEngine(g, fed, method_config(m, tau0=4), rounds=rounds,
+                        clients_per_round=5, seed=0).run()
         rows.append({
             "method": m,
             "final_acc": round(res.final["acc"] * 100, 2),

@@ -3,8 +3,7 @@ scaled to the synthetic graph sizes — the claim is accuracy stays high and
 FedAIS's comm advantage persists as K grows)."""
 from __future__ import annotations
 
-from repro.federated.baselines import method_config
-from repro.federated.simulator import run_federated
+from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup
 
 
@@ -15,8 +14,8 @@ def run(quick: bool = True) -> list[dict]:
     for K in ks:
         g, fed = fed_setup("reddit", 96 if quick else 64, K, "iid")
         for m in ("fedall", "fedais"):
-            res = run_federated(g, fed, method_config(m, tau0=4 if m == "fedais" else 1),
-                                rounds=rounds, clients_per_round=max(3, K // 4), seed=0)
+            res = FedEngine(g, fed, method_config(m, tau0=4 if m == "fedais" else 1),
+                            rounds=rounds, clients_per_round=max(3, K // 4), seed=0).run()
             rows.append({
                 "n_clients": K,
                 "method": m,

@@ -2,8 +2,7 @@
 sample-selection ratio r."""
 from __future__ import annotations
 
-from repro.federated.baselines import method_config
-from repro.federated.simulator import run_federated
+from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup
 
 
@@ -15,8 +14,8 @@ def run(quick: bool = True) -> list[dict]:
     alphas = ["0.1", "0.5", "10"] if quick else ["0.05", "0.1", "0.5", "1.0", "10", "100"]
     for a in alphas:
         g, fed = fed_setup("reddit", 96 if quick else 64, 16, a)
-        res = run_federated(g, fed, method_config("fedais", tau0=4),
-                            rounds=rounds, clients_per_round=5, seed=0)
+        res = FedEngine(g, fed, method_config("fedais", tau0=4),
+                        rounds=rounds, clients_per_round=5, seed=0).run()
         rows.append({
             "sweep": "alpha", "value": a,
             "final_acc": round(res.final["acc"] * 100, 2),
@@ -27,8 +26,8 @@ def run(quick: bool = True) -> list[dict]:
     ratios = [0.1, 0.5, 0.9] if quick else [0.1, 0.3, 0.5, 0.7, 0.9]
     g, fed = fed_setup("reddit", 96 if quick else 64, 16, "iid")
     for r in ratios:
-        res = run_federated(g, fed, method_config("fedais", tau0=4, sample_ratio=r),
-                            rounds=rounds, clients_per_round=5, seed=0)
+        res = FedEngine(g, fed, method_config("fedais", tau0=4, sample_ratio=r),
+                        rounds=rounds, clients_per_round=5, seed=0).run()
         rows.append({
             "sweep": "sample_ratio", "value": r,
             "final_acc": round(res.final["acc"] * 100, 2),

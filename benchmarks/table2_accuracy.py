@@ -6,8 +6,7 @@ baselines — not the absolute public-dataset numbers.
 """
 from __future__ import annotations
 
-from repro.federated.baselines import method_config
-from repro.federated.simulator import run_federated
+from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup
 
 METHODS = ("fedall", "fedrandom", "fedsage+", "fedpns", "fedgraph", "fedais")
@@ -24,8 +23,8 @@ def run(quick: bool = True) -> list[dict]:
             for m in METHODS:
                 mcfg = method_config(m, tau0=4 if m == "fedais" else
                                      (2 if m == "fedpns" else 1))
-                res = run_federated(g, fed, mcfg, rounds=rounds,
-                                    clients_per_round=5, seed=0)
+                res = FedEngine(g, fed, mcfg, rounds=rounds,
+                                clients_per_round=5, seed=0).run()
                 rows.append({
                     "dataset": ds,
                     "setting": "iid" if setting == "iid" else "non-iid",

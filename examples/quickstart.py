@@ -5,9 +5,8 @@ accuracy / communication trade-off the paper is about.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.federated.baselines import method_config
+from repro.api import FedEngine, method_config
 from repro.federated.partition import partition_graph
-from repro.federated.simulator import run_federated
 from repro.graph.data import make_dataset
 
 
@@ -25,8 +24,8 @@ def main():
     # 3. train with FedAIS (importance sampling + adaptive sync) and FedAll
     for method in ("fedais", "fedall"):
         mcfg = method_config(method, tau0=4 if method == "fedais" else 1)
-        res = run_federated(graph, fed, mcfg, rounds=10, clients_per_round=5,
-                            seed=0, verbose=False)
+        res = FedEngine(graph, fed, mcfg, rounds=10, clients_per_round=5,
+                        seed=0, verbose=False).run()
         f = res.final
         print(f"{method:8s} acc={f['acc']*100:5.1f}%  f1={f['f1']*100:5.1f}%  "
               f"comm={f['comm_total_bytes']/1e6:7.1f} MB "

@@ -1,0 +1,79 @@
+"""repro.api — the composable federated training surface.
+
+Quick tour::
+
+    from repro.api import FedEngine, method_config
+
+    res = FedEngine(graph, fed, "fedais", rounds=10, clients_per_round=5).run()
+    res = FedEngine(graph, fed, method_config("fedall", aggregator="weighted"),
+                    rounds=10).run()
+
+Extension points (all string-keyed registries):
+
+    register_method(name, strategy=..., **config_defaults)
+    register_strategy_kind(kind, MethodStrategySubclass)
+    register_aggregator(name, factory)
+
+plus direct component injection on the engine:
+
+    FedEngine(graph, fed, "fedais",
+              selector=LossBiasedSelector(),
+              aggregator=WeightedFedAvg(),
+              callbacks=[EvalCallback(), HistoryCallback(), MyCallback()])
+"""
+from repro.api.callbacks import (
+    BaseCallback,
+    EarlyStopCallback,
+    EvalCallback,
+    HistoryCallback,
+    RoundContext,
+    VerboseCallback,
+    default_callbacks,
+)
+from repro.api.engine import EngineState, FedEngine, RunResult
+from repro.api.protocols import (
+    AdaptiveSyncController,
+    Aggregator,
+    ClientSelector,
+    CostModel,
+    FedAvg,
+    FixedSyncController,
+    LossBiasedSelector,
+    PaperCostModel,
+    RoundCallback,
+    SizeBiasedSelector,
+    SyncController,
+    UniformSelector,
+    WeightedFedAvg,
+)
+from repro.api.registry import (
+    available_aggregators,
+    available_methods,
+    build_aggregator,
+    build_strategy,
+    method_config,
+    register_aggregator,
+    register_method,
+    unregister_method,
+)
+from repro.api.strategies import (
+    BanditStrategy,
+    GeneratorStrategy,
+    MethodStrategy,
+    register_strategy_kind,
+    strategy_kind_for,
+)
+
+__all__ = [
+    "AdaptiveSyncController", "Aggregator", "BanditStrategy", "BaseCallback",
+    "ClientSelector", "CostModel", "EarlyStopCallback", "EngineState",
+    "EvalCallback", "FedAvg", "FedEngine", "FixedSyncController",
+    "GeneratorStrategy", "HistoryCallback", "LossBiasedSelector",
+    "MethodStrategy", "PaperCostModel", "RoundCallback", "RoundContext",
+    "RunResult", "SizeBiasedSelector", "SyncController", "UniformSelector",
+    "VerboseCallback", "WeightedFedAvg", "available_aggregators",
+    "available_methods", "build_aggregator", "build_strategy",
+    "default_callbacks", "method_config", "register_aggregator",
+    "register_method", "register_strategy_kind", "strategy_kind_for",
+    "unregister_method",
+]

@@ -1,0 +1,244 @@
+"""FedEngine: the composable federated training engine (Algorithm 1).
+
+The engine owns only the method-agnostic spine of a round:
+
+    select clients -> strategy hooks -> vmapped LocalUpdate -> aggregate
+    -> historical write-back -> cost accounting -> callbacks
+
+Everything method- or policy-specific is a pluggable component (see
+repro.api.protocols / strategies / callbacks / registry). The per-client
+LocalUpdate is jit-compiled once per MethodConfig and vmapped over the m
+selected clients, so one round = one XLA call; the cross-client ghost pull
+inside lowers to a gather over the stacked client axis (on a TPU mesh this
+is the all-to-all of the real deployment — see launch/fed_dryrun.py).
+
+``repro.federated.simulator.run_federated`` is a thin compatibility shim
+over ``FedEngine(...).run()`` and is proven history-identical to the legacy
+monolith by tests/test_api.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.callbacks import RoundContext, default_callbacks
+from repro.api.protocols import (
+    AdaptiveSyncController,
+    PaperCostModel,
+    UniformSelector,
+)
+from repro.api.registry import build_aggregator, build_strategy, method_config
+from repro.core.fedais import MethodConfig, batch_size_for, make_local_update
+from repro.core.historical import init_historical
+from repro.federated.costs import CostMeter, DelayModel
+from repro.federated.partition import FederatedGraph
+from repro.federated.server import build_eval_graph, evaluate_global
+from repro.graph.data import GraphData
+from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_init, gcn_param_count
+
+_CLIENT_ARRAY_KEYS = (
+    "features", "labels", "node_mask", "train_mask",
+    "nbr_idx", "nbr_mask", "ghost_owner", "ghost_row", "ghost_mask",
+)
+
+
+@dataclass
+class RunResult:
+    method: str
+    dataset: str
+    history: dict = field(default_factory=dict)     # per-round lists
+    final: dict = field(default_factory=dict)
+    costs: CostMeter = field(default_factory=CostMeter)
+
+    def record(self, **kv):
+        for k, v in kv.items():
+            self.history.setdefault(k, []).append(v)
+
+    def rounds_to_acc(self, target: float) -> int | None:
+        for i, a in enumerate(self.history.get("test_acc", [])):
+            if a >= target:
+                return i + 1
+        return None
+
+    def comm_to_acc(self, target: float) -> float | None:
+        for a, c in zip(self.history.get("test_acc", []), self.history.get("comm_total", [])):
+            if a >= target:
+                return c
+        return None
+
+
+@dataclass
+class EngineState:
+    """Everything mutable across rounds; components read/write this."""
+
+    rng: np.random.Generator          # host RNG (client selection, ...)
+    key: jnp.ndarray                  # device PRNG chain
+    params: Any                       # global model pytree
+    hist: Any                         # HistoricalState (hist1/age tables)
+    ghost_feat: jnp.ndarray           # (K, g_max, F) synced/imputed ghosts
+    prev_loss: jnp.ndarray            # (K, n_max) last-seen per-node loss
+    arrays: dict                      # device-resident stacked client arrays
+    result: RunResult
+    tau: int = 1                      # current sync interval
+    initial_loss: Optional[float] = None
+    round: int = 0
+
+
+def _client_slice(arrays: dict, ids: np.ndarray) -> dict:
+    return {k: v[ids] for k, v in arrays.items()}
+
+
+class FedEngine:
+    """Composable federated trainer over a partitioned graph.
+
+    ``method`` is a registered method name (see repro.api.registry) or an
+    explicit MethodConfig. Any pluggable component can be overridden via
+    keyword; the defaults reproduce the paper's Algorithm 1 exactly.
+    """
+
+    def __init__(
+        self,
+        graph: GraphData,
+        fed: FederatedGraph,
+        method: Union[str, MethodConfig],
+        *,
+        rounds: int = 30,
+        clients_per_round: int = 10,
+        seed: int = 0,
+        target_acc: float | None = None,
+        delay: DelayModel = DelayModel(),
+        eval_every: int = 1,
+        verbose: bool = False,
+        selector=None,
+        aggregator=None,
+        sync=None,
+        cost_model=None,
+        strategy=None,
+        callbacks: Optional[Sequence] = None,
+    ):
+        self.graph, self.fed = graph, fed
+        self.mcfg = method_config(method) if isinstance(method, str) else method
+        self.rounds = rounds
+        self.clients_per_round = clients_per_round
+        self.seed = seed
+
+        # ---- pluggable components ----
+        self.strategy = strategy if strategy is not None else build_strategy(self.mcfg)
+        self.selector = selector if selector is not None else UniformSelector()
+        if aggregator is None:
+            aggregator = build_aggregator(self.mcfg.aggregator)
+        elif isinstance(aggregator, str):   # registry key, e.g. "weighted"
+            aggregator = build_aggregator(aggregator)
+        self.aggregator = aggregator
+        self.sync = sync if sync is not None else AdaptiveSyncController()
+        if cost_model is None:
+            cost_model = PaperCostModel(delay)
+        elif delay != DelayModel():
+            # same fail-fast contract as the callbacks/knobs conflict below
+            raise ValueError("`delay` only configures the default "
+                             "PaperCostModel; give your explicit cost_model "
+                             "its own delay instead")
+        self.cost_model = cost_model
+        if callbacks is None:
+            self.callbacks = default_callbacks(eval_every=eval_every, verbose=verbose,
+                                               target_acc=target_acc)
+        else:
+            # an explicit callback stack replaces the default one wholesale;
+            # the convenience knobs only parameterize the default stack
+            if eval_every != 1 or verbose or target_acc is not None:
+                raise ValueError(
+                    "eval_every/verbose/target_acc only configure the default "
+                    "callback stack; with an explicit `callbacks` list, drop "
+                    "them and add EvalCallback/VerboseCallback/"
+                    "EarlyStopCallback to your list instead")
+            self.callbacks = list(callbacks)
+
+        # ---- static geometry + compiled LocalUpdate ----
+        self.F, self.H1 = fed.n_features, HIDDEN[0]
+        self.n_params = gcn_param_count(self.F, fed.n_classes)
+        avg_deg = float(fed.nbr_mask.sum() / np.maximum(fed.node_mask.sum(), 1))
+        self.fwd_flops_node = gcn_flops_per_node(self.F, fed.n_classes, avg_deg)
+        self.bsz = batch_size_for(self.mcfg, fed.n_max)
+        local_update = make_local_update(self.mcfg, fed.n_max, fed.g_max, self.H1)
+        self._vm = jax.jit(jax.vmap(
+            local_update,
+            in_axes=(None, 0, None, None, 0, 0, 0, 0, None, 0, None, 0)))
+        self.eval_graph = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed)
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    def init_state(self) -> EngineState:
+        fed, seed = self.fed, self.seed
+        K, n_max, g_max, F = fed.n_clients, fed.n_max, fed.g_max, self.F
+        arrays = {k: jnp.asarray(getattr(fed, k)) for k in _CLIENT_ARRAY_KEYS}
+        state = EngineState(
+            rng=np.random.default_rng(seed),
+            key=jax.random.PRNGKey(seed),
+            params=gcn_init(jax.random.PRNGKey(seed + 1), F, fed.n_classes),
+            hist=init_historical(K, n_max, g_max, F, self.H1),
+            ghost_feat=jnp.zeros((K, g_max, F), jnp.float32),
+            prev_loss=jnp.full((K, n_max), -1.0, jnp.float32),
+            arrays=arrays,
+            result=RunResult(method=self.mcfg.name, dataset=self.graph.name),
+            tau=self.sync.initial(self.mcfg),
+        )
+        self.strategy.setup(self, state)
+        return state
+
+    def run_round(self, state: EngineState, t: int) -> bool:
+        """One federated round; returns True if a callback requested stop."""
+        state.round = t
+        sel = self.selector.select(self, state)
+        sel_j = jnp.asarray(sel)
+        state.key, *ks = jax.random.split(state.key, len(sel) + 1)
+        keys = jnp.stack(ks)
+
+        fanouts = self.strategy.choose_fanouts(self, sel)
+        self.strategy.pre_round(self, state, sel)
+
+        client_data = _client_slice(state.arrays, sel)
+        out = self._vm(
+            state.params, client_data, state.arrays["features"], state.hist.hist1,
+            state.hist.hist1[sel_j], state.hist.age[sel_j], state.ghost_feat[sel_j],
+            state.prev_loss[sel_j], jnp.asarray(state.tau, jnp.int32), fanouts,
+            jnp.asarray(t * self.mcfg.local_epochs, jnp.int32), keys,
+        )
+        new_params_stack, new_hist1, new_age, new_ghost_feat, stats = out
+
+        # ---- merge: aggregation + historical write-back ----
+        weights = jnp.asarray(self.fed.client_sizes[sel], jnp.float32)
+        state.params = self.aggregator.aggregate(new_params_stack, weights)
+        state.hist = state.hist._replace(
+            hist1=state.hist.hist1.at[sel_j].set(new_hist1),
+            age=state.hist.age.at[sel_j].set(new_age),
+        )
+        state.ghost_feat = state.ghost_feat.at[sel_j].set(new_ghost_feat)
+        state.prev_loss = state.prev_loss.at[sel_j].set(stats["loss_all"])
+
+        state.result.costs.add(self.cost_model.round_cost(self, state, sel, stats))
+        self.strategy.post_round(self, state, sel, stats)
+
+        ctx = RoundContext(engine=self, state=state, t=t, rounds=self.rounds)
+        for cb in self.callbacks:
+            cb.on_round_end(ctx)
+        return ctx.stop
+
+    def run(self, state: EngineState | None = None) -> RunResult:
+        if state is None:
+            state = self.init_state()
+        for cb in self.callbacks:
+            cb.on_run_start(self, state)
+        for t in range(self.rounds):
+            if self.run_round(state, t):
+                break
+        final_eval = evaluate_global(state.params, self.eval_graph, "test")
+        state.result.final = dict(final_eval, **state.result.costs.snapshot())
+        for cb in self.callbacks:
+            cb.on_run_end(self, state)
+        return state.result

@@ -1,0 +1,212 @@
+"""Pluggable component protocols for the FedEngine, plus default impls.
+
+Each protocol isolates one axis of the method-space that the paper's
+Algorithm 1 fixes to a single choice:
+
+    ClientSelector  which clients participate in a round
+    Aggregator      how client models merge on the server
+    SyncController  how the embedding-sync interval tau evolves (Eq. 11)
+    CostModel       what a round costs (bytes / FLOPs / wall-clock)
+    RoundCallback   side effects at round boundaries (eval, logging, ...)
+
+Default implementations reproduce the legacy ``run_federated`` loop
+bit-for-bit (see tests/test_api.py parity tests). Custom components are
+plain objects satisfying the protocol — no registration required, pass
+them to ``FedEngine(..., selector=..., aggregator=...)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated.costs import CostMeter, DelayModel, embed_sync_bytes, model_bytes
+from repro.federated.server import fedavg, fedavg_weighted, select_clients, update_tau
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api.engine import EngineState, FedEngine
+    from repro.core.fedais import MethodConfig
+
+
+# ---------------------------------------------------------------------------
+# client selection
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ClientSelector(Protocol):
+    def select(self, engine: "FedEngine", state: "EngineState") -> np.ndarray:
+        """Return the ids of the clients participating this round."""
+        ...
+
+
+class UniformSelector:
+    """Uniform without replacement — the paper's (and legacy loop's) choice."""
+
+    def select(self, engine, state):
+        return select_clients(state.rng, engine.fed.n_clients,
+                              engine.clients_per_round)
+
+
+class SizeBiasedSelector:
+    """Sample clients with probability proportional to local dataset size.
+    Empty clients (a skewed Dirichlet partition can produce them) are never
+    selected; the round shrinks if fewer non-empty clients exist than m."""
+
+    def select(self, engine, state):
+        sizes = engine.fed.client_sizes.astype(np.float64)
+        p = sizes / max(sizes.sum(), 1.0)
+        m = min(engine.clients_per_round, engine.fed.n_clients,
+                int(np.count_nonzero(p)))
+        return state.rng.choice(engine.fed.n_clients, size=m, replace=False, p=p)
+
+
+class LossBiasedSelector:
+    """Prefer clients whose last-seen mean local loss is highest (never-seen
+    clients rank first) — the round-level analogue of Eq. 7's node scores."""
+
+    def select(self, engine, state):
+        pl = np.asarray(state.prev_loss)
+        # padded slots of a visited client hold 0.0 (loss_all is node-masked),
+        # so average only over real nodes with an observed loss
+        node_mask = np.asarray(engine.fed.node_mask) > 0
+        real = (pl >= 0) & node_mask
+        mean_loss = (pl * real).sum(axis=1) / np.maximum(real.sum(axis=1), 1)
+        # unseen (but non-empty) clients rank first; clients with no nodes at
+        # all can never produce a loss and must rank last, not first forever
+        scores = np.where(real.any(axis=1), mean_loss, np.inf)
+        scores = np.where(node_mask.any(axis=1), scores, -np.inf)
+        # random tie-break keeps unseen clients in shuffled order
+        tie = state.rng.random(engine.fed.n_clients)
+        order = np.lexsort((tie, -scores))
+        m = min(engine.clients_per_round, engine.fed.n_clients)
+        return order[:m]
+
+
+# ---------------------------------------------------------------------------
+# server-side aggregation
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Aggregator(Protocol):
+    def aggregate(self, stacked_params, weights=None):
+        """Merge a (m, ...) stacked client pytree into one global pytree."""
+        ...
+
+
+class FedAvg:
+    """Unweighted mean over the selected clients — Algorithm 1 line 7."""
+
+    def aggregate(self, stacked_params, weights=None):
+        return fedavg(stacked_params)
+
+
+class WeightedFedAvg:
+    """Dataset-size-weighted FedAvg (McMahan et al.); the engine passes
+    ``fed.client_sizes[sel]`` as the weights."""
+
+    def aggregate(self, stacked_params, weights=None):
+        if weights is None:
+            raise ValueError("WeightedFedAvg needs per-client weights")
+        return fedavg_weighted(stacked_params, jnp.asarray(weights, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sync-interval control
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class SyncController(Protocol):
+    def initial(self, mcfg: "MethodConfig") -> int:
+        ...
+
+    def update(self, mcfg: "MethodConfig", test_loss: float,
+               initial_loss: float) -> int:
+        ...
+
+
+class AdaptiveSyncController:
+    """Wraps server.update_tau: Eq. 11 when ``mcfg.adaptive_sync``, else the
+    fixed interval tau0 (FedPNS-style)."""
+
+    def initial(self, mcfg):
+        return mcfg.tau0
+
+    def update(self, mcfg, test_loss, initial_loss):
+        return update_tau(mcfg, test_loss, initial_loss, mcfg.tau0)
+
+
+class FixedSyncController:
+    """Always tau0, regardless of the loss trajectory."""
+
+    def initial(self, mcfg):
+        return mcfg.tau0
+
+    def update(self, mcfg, test_loss, initial_loss):
+        return mcfg.tau0
+
+
+# ---------------------------------------------------------------------------
+# cost accounting
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class CostModel(Protocol):
+    def round_cost(self, engine: "FedEngine", state: "EngineState",
+                   sel: np.ndarray, stats: dict) -> CostMeter:
+        ...
+
+
+@dataclass
+class PaperCostModel:
+    """The paper's analytic byte/FLOP/delay accounting (Fig. 3/4 axes),
+    lifted verbatim from the legacy loop. Method-specific extras (FedSage+
+    generator traffic/compute) come from the strategy's cost hooks, keeping
+    this model branch-free."""
+
+    delay: DelayModel = field(default_factory=DelayModel)
+
+    def round_cost(self, engine, state, sel, stats):
+        fed, mcfg = engine.fed, engine.mcfg
+        cost = CostMeter()
+        n_sync = np.asarray(stats["n_sync"])
+        n_pulled = np.asarray(stats["n_ghost_pulled"])
+        sizes = fed.client_sizes[sel]
+        extra_bytes = engine.strategy.round_model_bytes(engine)
+        per_client_compute = []
+        for i, _k in enumerate(sel):
+            comm_model = 2 * model_bytes(engine.n_params) + extra_bytes
+            comm_embed = embed_sync_bytes(n_pulled[i], (engine.F, engine.H1))
+            nodes_processed = sizes[i] + mcfg.local_epochs * min(
+                engine.bsz, max(int(sizes[i]), 1))
+            flops = 3.0 * engine.fwd_flops_node * nodes_processed \
+                + engine.strategy.extra_flops(engine, sizes[i])
+            cost.comm_model_bytes += comm_model
+            cost.comm_embed_bytes += comm_embed
+            cost.compute_flops += flops
+            per_client_compute.append(self.delay.compute_time(flops))
+        o = self.delay.comm_time(
+            cost.comm_embed_bytes / max(len(sel), 1)
+            + 2 * model_bytes(engine.n_params))
+        cost.wall_clock_s = max(per_client_compute) + o / max(state.tau, 1)
+        cost.sync_events = int(n_sync.sum())
+        return cost
+
+
+# ---------------------------------------------------------------------------
+# round callbacks
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class RoundCallback(Protocol):
+    """Side-effect hooks; see repro.api.callbacks for the default stack."""
+
+    def on_run_start(self, engine: "FedEngine", state: "EngineState") -> None:
+        ...
+
+    def on_round_end(self, ctx) -> None:
+        ...
+
+    def on_run_end(self, engine: "FedEngine", state: "EngineState") -> None:
+        ...

@@ -1,0 +1,113 @@
+"""String-keyed registries: method name -> (config preset, strategy kind),
+and aggregator name -> Aggregator factory.
+
+Every method in the paper (FedAIS, its ablations, the five baselines) is a
+registry entry, so adding a scenario is a ``register_method`` call — not
+surgery on the round loop:
+
+    from repro.api import register_method, register_strategy_kind
+
+    register_strategy_kind("my-sampler", MyStrategy)   # optional new hooks
+    register_method("fedgrains", strategy="my-sampler",
+                    importance_sampling=True, neighbor_fanout=5)
+    res = FedEngine(graph, fed, "fedgrains").run()
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+from repro.api.protocols import Aggregator, FedAvg, WeightedFedAvg
+from repro.api.strategies import build_strategy  # re-exported  # noqa: F401
+from repro.core.fedais import MethodConfig
+
+
+@dataclass(frozen=True)
+class MethodSpec:
+    name: str
+    strategy: str                 # strategy kind key ("auto" = infer)
+    defaults: Mapping[str, Any]   # MethodConfig field overrides
+
+
+_METHODS: dict[str, MethodSpec] = {}
+
+
+def register_method(name: str, *, strategy: str = "auto",
+                    overwrite: bool = False, **defaults) -> MethodSpec:
+    """Register a method under ``name`` with MethodConfig field defaults."""
+    if name in _METHODS and not overwrite:
+        raise KeyError(f"method {name!r} already registered")
+    spec = MethodSpec(name=name, strategy=strategy, defaults=dict(defaults))
+    _METHODS[name] = spec
+    return spec
+
+
+def unregister_method(name: str) -> None:
+    _METHODS.pop(name, None)
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(sorted(_METHODS))
+
+
+def method_config(name: str, **overrides) -> MethodConfig:
+    """Resolve a registered method name to its MethodConfig."""
+    if name not in _METHODS:
+        raise KeyError(f"unknown method {name!r}; known: {sorted(_METHODS)}")
+    spec = _METHODS[name]
+    kw = dict(spec.defaults)
+    kw.update(overrides)
+    kw.setdefault("strategy", spec.strategy)
+    return MethodConfig(name=name, **kw)
+
+
+# ---------------------------------------------------------------------------
+# aggregator registry (exposed through MethodConfig.aggregator)
+# ---------------------------------------------------------------------------
+
+_AGGREGATORS: dict[str, Callable[[], Aggregator]] = {}
+
+
+def register_aggregator(name: str, factory: Callable[[], Aggregator],
+                        *, overwrite: bool = False) -> None:
+    if name in _AGGREGATORS and not overwrite:
+        raise KeyError(f"aggregator {name!r} already registered")
+    _AGGREGATORS[name] = factory
+
+
+def available_aggregators() -> tuple[str, ...]:
+    return tuple(sorted(_AGGREGATORS))
+
+
+def build_aggregator(name: str) -> Aggregator:
+    if name not in _AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}; known: {sorted(_AGGREGATORS)}")
+    return _AGGREGATORS[name]()
+
+
+register_aggregator("fedavg", FedAvg)
+register_aggregator("weighted", WeightedFedAvg)
+
+
+# ---------------------------------------------------------------------------
+# the paper's method-space (Table 2 / Fig. 5 columns)
+# ---------------------------------------------------------------------------
+
+register_method("fedall", importance_sampling=False, adaptive_sync=False,
+                use_all_samples=True, tau0=1)
+register_method("fedrandom", importance_sampling=False, adaptive_sync=False,
+                use_all_samples=False, tau0=1)
+register_method("fedsage+", strategy="generator",
+                importance_sampling=False, adaptive_sync=False,
+                use_all_samples=True, tau0=1, use_generator=True)
+register_method("fedpns", importance_sampling=False, adaptive_sync=False,
+                use_all_samples=True, tau0=2)
+register_method("fedgraph", strategy="bandit",
+                importance_sampling=False, adaptive_sync=False,
+                use_all_samples=True, tau0=1, bandit_fanout=True)
+register_method("fedlocal", importance_sampling=False, adaptive_sync=False,
+                use_all_samples=True, tau0=1, use_ghosts=False)
+register_method("fedais1", importance_sampling=True, adaptive_sync=False)
+register_method("fedais2", importance_sampling=False, adaptive_sync=True,
+                use_all_samples=True)
+register_method("fedais", importance_sampling=True, adaptive_sync=True)

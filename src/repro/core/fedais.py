@@ -40,6 +40,9 @@ class MethodConfig:
     bandit_fanout: bool = False          # FedGraph-lite: learned fanout
     use_ghosts: bool = True              # FedLocal ablation: ignore cross-client
     batch_cap: int = 256                 # padded batch size upper bound
+    # repro.api resolution hooks (string keys into the api registries):
+    strategy: str = "auto"               # method-strategy kind; "auto" infers
+    aggregator: str = "fedavg"           # server aggregation ("fedavg"|"weighted")
 
 
 def batch_size_for(mcfg: MethodConfig, n_max: int) -> int:

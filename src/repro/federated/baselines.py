@@ -28,29 +28,11 @@ FANOUT_ACTIONS = (2, 5, 10, 32)
 
 
 def method_config(name: str, **overrides) -> MethodConfig:
-    presets = {
-        "fedall": dict(importance_sampling=False, adaptive_sync=False,
-                       use_all_samples=True, tau0=1),
-        "fedrandom": dict(importance_sampling=False, adaptive_sync=False,
-                          use_all_samples=False, tau0=1),
-        "fedsage+": dict(importance_sampling=False, adaptive_sync=False,
-                         use_all_samples=True, tau0=1, use_generator=True),
-        "fedpns": dict(importance_sampling=False, adaptive_sync=False,
-                       use_all_samples=True, tau0=2),
-        "fedgraph": dict(importance_sampling=False, adaptive_sync=False,
-                         use_all_samples=True, tau0=1, bandit_fanout=True),
-        "fedlocal": dict(importance_sampling=False, adaptive_sync=False,
-                         use_all_samples=True, tau0=1, use_ghosts=False),
-        "fedais1": dict(importance_sampling=True, adaptive_sync=False),
-        "fedais2": dict(importance_sampling=False, adaptive_sync=True,
-                        use_all_samples=True),
-        "fedais": dict(importance_sampling=True, adaptive_sync=True),
-    }
-    if name not in presets:
-        raise KeyError(f"unknown method {name!r}; known: {sorted(presets)}")
-    kw = dict(presets[name])
-    kw.update(overrides)
-    return MethodConfig(name=name, **kw)
+    """Resolve a method name to its MethodConfig via the repro.api registry
+    (the presets that used to live here are now registry entries)."""
+    from repro.api.registry import method_config as registry_method_config
+
+    return registry_method_config(name, **overrides)
 
 
 ALL_BASELINES = ("fedall", "fedrandom", "fedsage+", "fedpns", "fedgraph")

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api.registry import method_config
 from repro.core.fedais import MethodConfig, make_local_update
 from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_label
 from repro.models.gcn import HIDDEN, gcn_init, gcn_param_count
@@ -98,7 +99,7 @@ def main():
         mesh = make_production_mesh(multi_pod=mesh_name == "pod2")
         chips = mesh_chips(mesh)
         K = args.clients or chips
-        mcfg = MethodConfig(name="fedais", local_epochs=4, batch_cap=args.n_max)
+        mcfg = method_config("fedais", local_epochs=4, batch_cap=args.n_max)
         step, sargs = build_round_step(mcfg, K, args.n_max, args.g_max,
                                        args.features, args.classes, mesh)
         t0 = time.time()

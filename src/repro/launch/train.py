@@ -105,6 +105,11 @@ def train_federated(args) -> dict:
     step_fn = jax.jit(lm.make_train_step(cfg, constant_schedule(args.lr)))
     loss_fn = jax.jit(lambda p, b: lm.lm_loss(p, cfg, b)[0])
 
+    # server aggregation through the repro.api registry's canonical FedAvg
+    # (clients train equal token counts per round, so plain FedAvg is exact)
+    from repro.api.registry import build_aggregator
+    aggregator = build_aggregator("fedavg")
+
     tau0 = args.tau0
     tau = tau0
     f0 = None
@@ -136,8 +141,9 @@ def train_federated(args) -> dict:
             prev_losses[k] = last
             round_losses.append(last)
             new_params.append(p_k)
-        # FedAvg sync
-        params = jax.tree_util.tree_map(lambda *xs: sum(xs) / len(xs), *new_params)
+        # per-leaf stacking keeps the transient K-copy to one leaf at a time
+        params = jax.tree_util.tree_map(
+            lambda *xs: aggregator.aggregate(jnp.stack(xs)), *new_params)
         comm_events += K
         total_steps += tau * K
         rounds += 1

@@ -1,0 +1,345 @@
+"""Tests for the repro.api surface: engine/legacy parity, the method and
+aggregator registries, and each pluggable protocol."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _legacy_simulator import legacy_run_federated
+from repro.api import (
+    AdaptiveSyncController,
+    BanditStrategy,
+    BaseCallback,
+    EarlyStopCallback,
+    EvalCallback,
+    FedAvg,
+    FedEngine,
+    FixedSyncController,
+    GeneratorStrategy,
+    HistoryCallback,
+    LossBiasedSelector,
+    MethodStrategy,
+    SizeBiasedSelector,
+    UniformSelector,
+    WeightedFedAvg,
+    available_aggregators,
+    available_methods,
+    build_aggregator,
+    build_strategy,
+    method_config,
+    register_method,
+    register_strategy_kind,
+    strategy_kind_for,
+    unregister_method,
+)
+from repro.core.fedais import MethodConfig
+from repro.core.sync import adaptive_tau
+
+PAPER_METHODS = ("fedall", "fedrandom", "fedsage+", "fedpns", "fedgraph",
+                 "fedlocal", "fedais1", "fedais2", "fedais")
+
+PARITY_KEYS = ("test_acc", "test_loss", "tau", "comm_total", "comm_embed",
+               "flops", "wall_clock")
+
+
+# ---------------------------------------------------------------------------
+# engine vs legacy-loop parity (the refactor's correctness contract)
+# ---------------------------------------------------------------------------
+
+def _assert_parity(g, fed, mcfg, **kw):
+    legacy = legacy_run_federated(g, fed, mcfg, **kw)
+    new = FedEngine(g, fed, mcfg, **kw).run()
+    for k in PARITY_KEYS:
+        assert legacy.history[k] == new.history[k], f"history[{k!r}] diverged"
+    assert legacy.final == new.final
+
+
+def test_engine_matches_legacy_fedais_smoke(small_fed):
+    """Fast-lane parity: FedAIS bit-for-bit vs the frozen legacy loop."""
+    g, fed = small_fed
+    _assert_parity(g, fed, method_config("fedais", tau0=4),
+                   rounds=2, clients_per_round=3, seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fedais", "fedsage+", "fedgraph", "fedall"])
+def test_engine_matches_legacy(small_fed, method):
+    """Full parity: generator- and bandit-state methods included."""
+    g, fed = small_fed
+    _assert_parity(g, fed, method_config(method, tau0=4 if method == "fedais" else 1),
+                   rounds=4, clients_per_round=4, seed=0)
+
+
+@pytest.mark.slow
+def test_engine_matches_legacy_early_stop_and_eval_every(small_fed):
+    g, fed = small_fed
+    _assert_parity(g, fed, method_config("fedais"), rounds=5,
+                   clients_per_round=3, seed=1, eval_every=2, target_acc=0.2)
+
+
+# ---------------------------------------------------------------------------
+# method registry
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_method_raises():
+    with pytest.raises(KeyError, match="unknown method"):
+        method_config("fedbogus")
+
+
+def test_registry_all_paper_methods_resolve():
+    assert set(PAPER_METHODS) <= set(available_methods())
+    for name in PAPER_METHODS:
+        mcfg = method_config(name)
+        assert mcfg.name == name
+        strat = build_strategy(mcfg)
+        assert isinstance(strat, MethodStrategy)
+
+
+def test_registry_strategy_kinds():
+    assert isinstance(build_strategy(method_config("fedsage+")), GeneratorStrategy)
+    assert isinstance(build_strategy(method_config("fedgraph")), BanditStrategy)
+    assert type(build_strategy(method_config("fedais"))) is MethodStrategy
+
+
+def test_strategy_auto_inference_from_flags():
+    """Custom MethodConfigs (legacy shim path) still resolve via flags."""
+    assert strategy_kind_for(MethodConfig(name="x", use_generator=True)) == "generator"
+    assert strategy_kind_for(MethodConfig(name="x", bandit_fanout=True)) == "bandit"
+    assert strategy_kind_for(MethodConfig(name="x")) == "plain"
+
+
+def test_registry_overrides_and_custom_registration():
+    mcfg = method_config("fedais", tau0=7, neighbor_fanout=3)
+    assert mcfg.tau0 == 7 and mcfg.neighbor_fanout == 3
+
+    class NullStrategy(MethodStrategy):
+        pass
+
+    register_strategy_kind("null-test", NullStrategy)
+    register_method("mymethod-test", strategy="null-test",
+                    importance_sampling=False, tau0=3)
+    try:
+        mcfg = method_config("mymethod-test")
+        assert mcfg.tau0 == 3 and mcfg.strategy == "null-test"
+        assert isinstance(build_strategy(mcfg), NullStrategy)
+        with pytest.raises(KeyError, match="already registered"):
+            register_method("mymethod-test")
+    finally:
+        unregister_method("mymethod-test")
+        from repro.api.strategies import STRATEGY_KINDS
+        STRATEGY_KINDS.pop("null-test", None)
+    assert "mymethod-test" not in available_methods()
+
+
+def test_baselines_method_config_delegates_to_registry():
+    from repro.federated.baselines import method_config as legacy_mc
+
+    assert legacy_mc("fedais", tau0=9) == method_config("fedais", tau0=9)
+    with pytest.raises(KeyError):
+        legacy_mc("nope")
+
+
+# ---------------------------------------------------------------------------
+# aggregators (incl. the previously dead fedavg_weighted)
+# ---------------------------------------------------------------------------
+
+def test_aggregator_registry():
+    assert set(available_aggregators()) >= {"fedavg", "weighted"}
+    assert isinstance(build_aggregator("fedavg"), FedAvg)
+    assert isinstance(build_aggregator("weighted"), WeightedFedAvg)
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        build_aggregator("median")
+
+
+def test_fedavg_vs_weighted_aggregate():
+    stacked = {"w": jnp.asarray([[0.0], [10.0]])}
+    np.testing.assert_allclose(np.asarray(FedAvg().aggregate(stacked)["w"]), [5.0])
+    out = WeightedFedAvg().aggregate(stacked, jnp.asarray([3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5])
+    with pytest.raises(ValueError):
+        WeightedFedAvg().aggregate(stacked, None)
+
+
+def test_weighted_aggregator_via_method_config(small_fed):
+    """MethodConfig.aggregator='weighted' routes through WeightedFedAvg."""
+    g, fed = small_fed
+    mcfg = method_config("fedais", aggregator="weighted")
+    eng = FedEngine(g, fed, mcfg, rounds=2, clients_per_round=3, seed=0)
+    assert isinstance(eng.aggregator, WeightedFedAvg)
+    res = eng.run()
+    assert np.isfinite(res.final["loss"])
+    assert res.final["acc"] >= 0.0
+    # a registry key passed directly to the engine resolves too (fail-fast)
+    eng2 = FedEngine(g, fed, method_config("fedais"), rounds=1,
+                     aggregator="weighted")
+    assert isinstance(eng2.aggregator, WeightedFedAvg)
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        FedEngine(g, fed, method_config("fedais"), rounds=1, aggregator="median")
+
+
+# ---------------------------------------------------------------------------
+# selectors
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    def __init__(self, sizes, m, node_mask=None):
+        class _Fed:
+            pass
+        self.fed = _Fed()
+        self.fed.n_clients = len(sizes)
+        self.fed.client_sizes = np.asarray(sizes, np.int32)
+        self.fed.node_mask = node_mask
+        self.clients_per_round = m
+
+
+class _FakeState:
+    def __init__(self, seed=0, prev_loss=None):
+        self.rng = np.random.default_rng(seed)
+        self.prev_loss = prev_loss
+
+
+def test_uniform_selector_matches_legacy_stream():
+    from repro.federated.server import select_clients
+
+    eng = _FakeEngine([5] * 10, 4)
+    got = UniformSelector().select(eng, _FakeState(seed=7))
+    want = select_clients(np.random.default_rng(7), 10, 4)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_size_biased_selector_prefers_big_clients():
+    eng = _FakeEngine([1, 1, 1, 1000], 1)
+    picks = [int(SizeBiasedSelector().select(eng, _FakeState(seed=s))[0])
+             for s in range(20)]
+    assert picks.count(3) >= 18
+
+
+def test_size_biased_selector_skips_empty_clients():
+    """A skewed partition can leave clients with zero nodes; the round must
+    shrink instead of crashing on rng.choice with too few nonzero probs."""
+    eng = _FakeEngine([0, 7, 0, 0], 3)
+    sel = SizeBiasedSelector().select(eng, _FakeState(seed=0))
+    assert sel.tolist() == [1]
+
+
+def test_loss_biased_selector_prefers_high_loss():
+    eng = _FakeEngine([5] * 4, 2, node_mask=np.ones((4, 2)))
+    prev = np.asarray([[0.1, 0.1], [9.0, 9.0], [-1.0, -1.0], [0.5, 0.5]])
+    sel = set(LossBiasedSelector().select(
+        eng, _FakeState(seed=0, prev_loss=prev)).tolist())
+    assert sel == {2, 1}   # never-seen client first, then the lossiest
+
+
+def test_loss_biased_selector_ranks_empty_clients_last():
+    """Zero-node clients can never produce a loss; they must not hog the
+    unseen-first inf slot forever."""
+    mask = np.asarray([[0.0, 0.0], [1.0, 1.0], [1.0, 1.0]])
+    prev = np.asarray([[-1.0, -1.0], [2.0, 2.0], [-1.0, -1.0]])
+    eng = _FakeEngine([0, 2, 2], 2, node_mask=mask)
+    sel = LossBiasedSelector().select(eng, _FakeState(seed=0, prev_loss=prev))
+    assert sel.tolist() == [2, 1]   # unseen non-empty first, empty client last
+
+
+def test_loss_biased_selector_ignores_padding():
+    """Padded slots of visited clients hold 0.0; they must not deflate small
+    clients' mean loss (loss bias, not size bias)."""
+    mask = np.asarray([[1.0, 1.0, 1.0, 1.0], [1.0, 0.0, 0.0, 0.0]])
+    prev = np.asarray([[2.0, 2.0, 2.0, 2.0], [3.0, 0.0, 0.0, 0.0]])
+    eng = _FakeEngine([4, 1], 1, node_mask=mask)
+    sel = LossBiasedSelector().select(eng, _FakeState(seed=0, prev_loss=prev))
+    assert sel.tolist() == [1]   # mean 3.0 beats mean 2.0 despite padding
+
+
+# ---------------------------------------------------------------------------
+# sync controllers
+# ---------------------------------------------------------------------------
+
+def test_adaptive_sync_controller_matches_eq11():
+    mcfg = method_config("fedais", tau0=8)
+    ctl = AdaptiveSyncController()
+    assert ctl.initial(mcfg) == 8
+    assert ctl.update(mcfg, 0.5, 1.0) == adaptive_tau(0.5, 1.0, 8)
+
+
+def test_fixed_sync_controller_is_constant():
+    mcfg = method_config("fedpns")   # tau0=2, adaptive off
+    ctl = FixedSyncController()
+    assert ctl.initial(mcfg) == 2
+    assert ctl.update(mcfg, 1e-9, 1.0) == 2
+
+
+def test_adaptive_sync_controller_respects_fixed_methods():
+    mcfg = method_config("fedpns")
+    assert AdaptiveSyncController().update(mcfg, 1e-9, 1.0) == mcfg.tau0
+
+
+# ---------------------------------------------------------------------------
+# callbacks
+# ---------------------------------------------------------------------------
+
+def test_callback_hooks_and_early_stop(small_fed):
+    g, fed = small_fed
+    seen = {"starts": 0, "rounds": 0, "ends": 0}
+
+    class Spy(BaseCallback):
+        def on_run_start(self, engine, state):
+            seen["starts"] += 1
+
+        def on_round_end(self, ctx):
+            seen["rounds"] += 1
+            assert ctx.metrics is not None and "acc" in ctx.metrics
+
+        def on_run_end(self, engine, state):
+            seen["ends"] += 1
+
+    cbs = [EvalCallback(1), HistoryCallback(), Spy(), EarlyStopCallback(0.0)]
+    res = FedEngine(g, fed, method_config("fedais"), rounds=5,
+                    clients_per_round=3, seed=0, callbacks=cbs).run()
+    # target_acc=0.0 stops after the very first evaluated round
+    assert seen == {"starts": 1, "rounds": 1, "ends": 1}
+    assert len(res.history["test_acc"]) == 1
+    assert res.final  # final eval still recorded after early stop
+
+
+def test_explicit_callbacks_reject_default_stack_knobs(small_fed):
+    """target_acc/verbose/eval_every only parameterize the default callback
+    stack; silently dropping them alongside an explicit stack is an error."""
+    g, fed = small_fed
+    with pytest.raises(ValueError, match="default callback stack"):
+        FedEngine(g, fed, method_config("fedais"), rounds=2, target_acc=0.5,
+                  callbacks=[EvalCallback()])
+
+
+def test_explicit_cost_model_rejects_custom_delay(small_fed):
+    """Same fail-fast contract: delay only parameterizes the default
+    PaperCostModel, so combining it with an explicit cost_model is an error."""
+    from repro.api import PaperCostModel
+    from repro.federated.costs import DelayModel
+
+    g, fed = small_fed
+    with pytest.raises(ValueError, match="default PaperCostModel"):
+        FedEngine(g, fed, method_config("fedais"), rounds=2,
+                  delay=DelayModel(client_flops_per_s=1e9),
+                  cost_model=PaperCostModel())
+    # explicit cost model with the default delay is fine
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=2,
+                    cost_model=PaperCostModel(DelayModel(latency_s=0.2)))
+    assert eng.cost_model.delay.latency_s == 0.2
+
+
+def test_register_strategy_kind_overwrite():
+    from repro.api.strategies import STRATEGY_KINDS
+
+    class A(MethodStrategy):
+        pass
+
+    class B(MethodStrategy):
+        pass
+
+    register_strategy_kind("overwrite-test", A)
+    try:
+        with pytest.raises(KeyError, match="already registered"):
+            register_strategy_kind("overwrite-test", B)
+        register_strategy_kind("overwrite-test", B, overwrite=True)
+        assert STRATEGY_KINDS["overwrite-test"] is B
+    finally:
+        STRATEGY_KINDS.pop("overwrite-test", None)

@@ -4,10 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import FedEngine
 from repro.federated.baselines import method_config
 from repro.federated.partition import partition_graph
 from repro.federated.server import fedavg, fedavg_weighted, macro_f1, macro_ovr_auc
-from repro.federated.simulator import run_federated
+from repro.federated.simulator import run_federated  # legacy shim over FedEngine
 from repro.graph.data import DATASET_SPECS, downsample_edges, make_dataset
 from repro.models.gcn import gcn_batch_forward, gcn_full_forward, gcn_init, per_node_loss
 
@@ -160,33 +161,36 @@ def test_macro_metrics_perfect():
 # end-to-end federated runs (Algorithm 1)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("method", ["fedais", "fedall", "fedrandom", "fedpns",
                                     "fedgraph", "fedsage+", "fedais1", "fedais2"])
 def test_methods_run_and_learn(small_fed, method):
     g, fed = small_fed
-    res = run_federated(g, fed, method_config(method), rounds=4,
-                        clients_per_round=4, seed=0)
+    res = FedEngine(g, fed, method_config(method), rounds=4,
+                    clients_per_round=4, seed=0).run()
     assert res.final["acc"] > 1.5 / g.n_classes   # better than chance
     assert np.isfinite(res.final["loss"])
     assert res.final["comm_total_bytes"] > 0
 
 
+@pytest.mark.slow
 def test_fedais_learns_and_saves_embed_comm(small_fed):
     """FedAIS must beat FedAll on embedding-sync bytes at equal rounds."""
     g, fed = small_fed
-    ais = run_federated(g, fed, method_config("fedais", tau0=4),
-                        rounds=6, clients_per_round=4, seed=0)
-    fall = run_federated(g, fed, method_config("fedall"),
-                         rounds=6, clients_per_round=4, seed=0)
+    ais = FedEngine(g, fed, method_config("fedais", tau0=4),
+                    rounds=6, clients_per_round=4, seed=0).run()
+    fall = FedEngine(g, fed, method_config("fedall"),
+                     rounds=6, clients_per_round=4, seed=0).run()
     assert ais.final["comm_embed_bytes"] < fall.final["comm_embed_bytes"]
     assert ais.final["acc"] > 0.5 * fall.final["acc"]
 
 
+@pytest.mark.slow
 def test_adaptive_tau_trajectory(small_fed):
     """tau must never increase as test loss decreases (Eq. 11 trajectory)."""
     g, fed = small_fed
-    res = run_federated(g, fed, method_config("fedais", tau0=8),
-                        rounds=6, clients_per_round=4, seed=0)
+    res = FedEngine(g, fed, method_config("fedais", tau0=8),
+                    rounds=6, clients_per_round=4, seed=0).run()
     taus = res.history["tau"]
     losses = res.history["test_loss"]
     for i in range(1, len(taus)):
@@ -194,18 +198,22 @@ def test_adaptive_tau_trajectory(small_fed):
             assert taus[i] <= max(taus[:i])
 
 
+@pytest.mark.slow
 def test_fedlocal_ignores_ghosts(small_fed):
     g, fed = small_fed
-    res = run_federated(g, fed, method_config("fedlocal"), rounds=3,
-                        clients_per_round=4, seed=0)
+    res = FedEngine(g, fed, method_config("fedlocal"), rounds=3,
+                    clients_per_round=4, seed=0).run()
     assert res.final["comm_embed_bytes"] == 0.0
 
 
+@pytest.mark.slow
 def test_simulator_deterministic(small_fed):
+    """Same seed -> identical trajectories; also exercises the run_federated
+    compatibility shim against a directly constructed FedEngine."""
     g, fed = small_fed
     a = run_federated(g, fed, method_config("fedais"), rounds=3,
                       clients_per_round=3, seed=42)
-    b = run_federated(g, fed, method_config("fedais"), rounds=3,
-                      clients_per_round=3, seed=42)
+    b = FedEngine(g, fed, method_config("fedais"), rounds=3,
+                  clients_per_round=3, seed=42).run()
     assert a.history["test_acc"] == b.history["test_acc"]
     assert a.final["comm_total_bytes"] == b.final["comm_total_bytes"]

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # hypothesis, or a skip-stub when absent
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.data.pipeline import TokenPipeline, make_lm_batch
