@@ -20,6 +20,7 @@ BENCHMARKS = [
     "fig5_ablation",     # paper Fig. 5
     "fig6_clients",      # paper Fig. 6
     "fig7_sensitivity",  # paper Fig. 7
+    "fig8_async",        # extension: sync vs async scheduling wall-clock
     "kernel_bench",      # kernel layer (us_per_call + oracle deltas)
     "roofline",          # §Roofline from the dry-run artifacts
 ]

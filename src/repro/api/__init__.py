@@ -34,6 +34,7 @@ from repro.api.engine import EngineState, FedEngine, RunResult
 from repro.api.protocols import (
     AdaptiveSyncController,
     Aggregator,
+    AsyncScheduler,
     ClientSelector,
     CostModel,
     FedAvg,
@@ -41,19 +42,26 @@ from repro.api.protocols import (
     LossBiasedSelector,
     PaperCostModel,
     RoundCallback,
+    RoundScheduler,
     SizeBiasedSelector,
+    StalenessWeightedAggregator,
     SyncController,
+    SyncScheduler,
     UniformSelector,
     WeightedFedAvg,
+    staleness_discount,
 )
 from repro.api.registry import (
     available_aggregators,
     available_methods,
+    available_schedulers,
     build_aggregator,
+    build_scheduler,
     build_strategy,
     method_config,
     register_aggregator,
     register_method,
+    register_scheduler,
     unregister_method,
 )
 from repro.api.strategies import (
@@ -65,15 +73,17 @@ from repro.api.strategies import (
 )
 
 __all__ = [
-    "AdaptiveSyncController", "Aggregator", "BanditStrategy", "BaseCallback",
-    "ClientSelector", "CostModel", "EarlyStopCallback", "EngineState",
-    "EvalCallback", "FedAvg", "FedEngine", "FixedSyncController",
-    "GeneratorStrategy", "HistoryCallback", "LossBiasedSelector",
-    "MethodStrategy", "PaperCostModel", "RoundCallback", "RoundContext",
-    "RunResult", "SizeBiasedSelector", "SyncController", "UniformSelector",
-    "VerboseCallback", "WeightedFedAvg", "available_aggregators",
-    "available_methods", "build_aggregator", "build_strategy",
+    "AdaptiveSyncController", "Aggregator", "AsyncScheduler", "BanditStrategy",
+    "BaseCallback", "ClientSelector", "CostModel", "EarlyStopCallback",
+    "EngineState", "EvalCallback", "FedAvg", "FedEngine",
+    "FixedSyncController", "GeneratorStrategy", "HistoryCallback",
+    "LossBiasedSelector", "MethodStrategy", "PaperCostModel", "RoundCallback",
+    "RoundContext", "RoundScheduler", "RunResult", "SizeBiasedSelector",
+    "StalenessWeightedAggregator", "SyncController", "SyncScheduler",
+    "UniformSelector", "VerboseCallback", "WeightedFedAvg",
+    "available_aggregators", "available_methods", "available_schedulers",
+    "build_aggregator", "build_scheduler", "build_strategy",
     "default_callbacks", "method_config", "register_aggregator",
-    "register_method", "register_strategy_kind", "strategy_kind_for",
-    "unregister_method",
+    "register_method", "register_scheduler", "register_strategy_kind",
+    "staleness_discount", "strategy_kind_for", "unregister_method",
 ]

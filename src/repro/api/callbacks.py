@@ -11,6 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Optional
 
+import numpy as np
+
 from repro.federated.server import evaluate_global
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -27,6 +29,9 @@ class RoundContext:
     rounds: int                     # total planned rounds
     metrics: Optional[dict] = None  # server eval (set by EvalCallback)
     stop: bool = False              # set True to end the run
+    # async-scheduler extras (None under the lockstep SyncScheduler):
+    virtual_time: Optional[float] = None       # server virtual clock at merge
+    staleness: Optional[np.ndarray] = None     # per-merged-update staleness τ
 
 
 class BaseCallback:
@@ -57,10 +62,12 @@ class EvalCallback(BaseCallback):
                 st.initial_loss = max(ev["loss"], 1e-6)
             st.tau = eng.sync.update(eng.mcfg, ev["loss"], st.initial_loss)
             ctx.metrics = ev
+            st.last_eval = (ctx.t, ev)   # lets FedEngine.run skip a re-eval
 
 
 class HistoryCallback(BaseCallback):
-    """Append the per-round (acc, loss, tau, cumulative cost) history rows."""
+    """Append the per-round (acc, loss, tau, cumulative cost) history rows;
+    under an async scheduler also the virtual-clock/staleness columns."""
 
     def on_round_end(self, ctx):
         if ctx.metrics is None:
@@ -74,6 +81,13 @@ class HistoryCallback(BaseCallback):
             flops=st.result.costs.compute_flops,
             wall_clock=st.result.costs.wall_clock_s,
         )
+        if ctx.staleness is not None:
+            st.result.record(
+                virtual_time=ctx.virtual_time,
+                staleness_mean=float(np.mean(ctx.staleness)),
+                staleness_max=int(np.max(ctx.staleness)),
+                merged=len(ctx.staleness),
+            )
 
 
 class VerboseCallback(BaseCallback):

@@ -31,7 +31,12 @@ from repro.api.protocols import (
     PaperCostModel,
     UniformSelector,
 )
-from repro.api.registry import build_aggregator, build_strategy, method_config
+from repro.api.registry import (
+    build_aggregator,
+    build_scheduler,
+    build_strategy,
+    method_config,
+)
 from repro.core.fedais import MethodConfig, batch_size_for, make_local_update
 from repro.core.historical import init_historical
 from repro.federated.costs import CostMeter, DelayModel
@@ -86,6 +91,7 @@ class EngineState:
     tau: int = 1                      # current sync interval
     initial_loss: Optional[float] = None
     round: int = 0
+    last_eval: Optional[tuple] = None  # (round, metrics) from EvalCallback
 
 
 def _client_slice(arrays: dict, ids: np.ndarray) -> dict:
@@ -118,6 +124,7 @@ class FedEngine:
         sync=None,
         cost_model=None,
         strategy=None,
+        scheduler=None,
         callbacks: Optional[Sequence] = None,
     ):
         self.graph, self.fed = graph, fed
@@ -143,6 +150,11 @@ class FedEngine:
                              "PaperCostModel; give your explicit cost_model "
                              "its own delay instead")
         self.cost_model = cost_model
+        if scheduler is None:
+            scheduler = self.mcfg.scheduler     # registry key, "sync" default
+        if isinstance(scheduler, str):
+            scheduler = build_scheduler(scheduler)
+        self.scheduler = scheduler
         if callbacks is None:
             self.callbacks = default_callbacks(eval_every=eval_every, verbose=verbose,
                                                target_acc=target_acc)
@@ -191,10 +203,12 @@ class FedEngine:
         self.strategy.setup(self, state)
         return state
 
-    def run_round(self, state: EngineState, t: int) -> bool:
-        """One federated round; returns True if a callback requested stop."""
+    def dispatch(self, state: EngineState, sel: np.ndarray, t: int):
+        """Client half of a round: RNG split, strategy hooks, vmapped
+        LocalUpdate for the cohort ``sel`` departing from server version
+        ``t`` (the global batch-epoch offset). Returns the stacked outputs
+        ``(params, hist1, age, ghost_feat, stats)``."""
         state.round = t
-        sel = self.selector.select(self, state)
         sel_j = jnp.asarray(sel)
         state.key, *ks = jax.random.split(state.key, len(sel) + 1)
         keys = jnp.stack(ks)
@@ -203,41 +217,84 @@ class FedEngine:
         self.strategy.pre_round(self, state, sel)
 
         client_data = _client_slice(state.arrays, sel)
-        out = self._vm(
+        return self._vm(
             state.params, client_data, state.arrays["features"], state.hist.hist1,
             state.hist.hist1[sel_j], state.hist.age[sel_j], state.ghost_feat[sel_j],
             state.prev_loss[sel_j], jnp.asarray(state.tau, jnp.int32), fanouts,
             jnp.asarray(t * self.mcfg.local_epochs, jnp.int32), keys,
         )
+
+    def merge(self, state: EngineState, t: int, sel: np.ndarray, out,
+              *, staleness: np.ndarray | None = None, aggregator=None,
+              wall_clock_s: float | None = None,
+              virtual_time: float | None = None) -> bool:
+        """Server half of a round ``t``: aggregation, historical write-back,
+        cost accounting, strategy/callback hooks. Async schedulers pass the
+        per-update ``staleness`` (for discounted weights), a staleness-aware
+        ``aggregator``, and the virtual-clock ``wall_clock_s`` actually
+        waited (overriding the lockstep max(compute)+sync billing). Returns
+        True if a callback requested stop."""
+        state.round = t
+        sel_j = jnp.asarray(sel)
         new_params_stack, new_hist1, new_age, new_ghost_feat, stats = out
 
-        # ---- merge: aggregation + historical write-back ----
+        agg = self.aggregator if aggregator is None else aggregator
         weights = jnp.asarray(self.fed.client_sizes[sel], jnp.float32)
-        state.params = self.aggregator.aggregate(new_params_stack, weights)
+        if staleness is None:
+            state.params = agg.aggregate(new_params_stack, weights)
+        else:
+            state.params = agg.aggregate(new_params_stack, weights, staleness)
+
+        # A client can be merged twice in one buffer (re-selected while its
+        # previous update was still in flight): every update aggregates, but
+        # the client-state write-back keeps only the freshest entry (``sel``
+        # arrives sorted by dispatch version, so the last occurrence wins).
+        if len(np.unique(sel)) != len(sel):
+            _, last_rev = np.unique(np.asarray(sel)[::-1], return_index=True)
+            w = np.sort(len(sel) - 1 - last_rev)
+            sel_j = jnp.asarray(np.asarray(sel)[w])
+            new_hist1, new_age = new_hist1[w], new_age[w]
+            new_ghost_feat, loss_all = new_ghost_feat[w], stats["loss_all"][w]
+        else:
+            loss_all = stats["loss_all"]
         state.hist = state.hist._replace(
             hist1=state.hist.hist1.at[sel_j].set(new_hist1),
             age=state.hist.age.at[sel_j].set(new_age),
         )
         state.ghost_feat = state.ghost_feat.at[sel_j].set(new_ghost_feat)
-        state.prev_loss = state.prev_loss.at[sel_j].set(stats["loss_all"])
+        state.prev_loss = state.prev_loss.at[sel_j].set(loss_all)
 
-        state.result.costs.add(self.cost_model.round_cost(self, state, sel, stats))
+        cost = self.cost_model.round_cost(self, state, sel, stats)
+        if wall_clock_s is not None:
+            cost.wall_clock_s = wall_clock_s    # overlapped (virtual-clock) billing
+        state.result.costs.add(cost)
         self.strategy.post_round(self, state, sel, stats)
 
-        ctx = RoundContext(engine=self, state=state, t=t, rounds=self.rounds)
+        ctx = RoundContext(engine=self, state=state, t=t, rounds=self.rounds,
+                           virtual_time=virtual_time, staleness=staleness)
         for cb in self.callbacks:
             cb.on_round_end(ctx)
         return ctx.stop
+
+    def run_round(self, state: EngineState, t: int) -> bool:
+        """One lockstep federated round; True if a callback requested stop."""
+        state.round = t
+        sel = self.selector.select(self, state)
+        out = self.dispatch(state, sel, t)
+        return self.merge(state, t, sel, out)
 
     def run(self, state: EngineState | None = None) -> RunResult:
         if state is None:
             state = self.init_state()
         for cb in self.callbacks:
             cb.on_run_start(self, state)
-        for t in range(self.rounds):
-            if self.run_round(state, t):
-                break
-        final_eval = evaluate_global(state.params, self.eval_graph, "test")
+        self.scheduler.run(self, state)
+        if state.last_eval is not None and state.last_eval[0] == state.round:
+            # EvalCallback already scored this round's (unchanged) params;
+            # don't pay for the same server eval twice
+            final_eval = state.last_eval[1]
+        else:
+            final_eval = evaluate_global(state.params, self.eval_graph, "test")
         state.result.final = dict(final_eval, **state.result.costs.snapshot())
         for cb in self.callbacks:
             cb.on_run_end(self, state)

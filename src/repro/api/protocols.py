@@ -7,6 +7,7 @@ Algorithm 1 fixes to a single choice:
     Aggregator      how client models merge on the server
     SyncController  how the embedding-sync interval tau evolves (Eq. 11)
     CostModel       what a round costs (bytes / FLOPs / wall-clock)
+    RoundScheduler  when client updates merge (lockstep vs buffered-async)
     RoundCallback   side effects at round boundaries (eval, logging, ...)
 
 Default implementations reproduce the legacy ``run_federated`` loop
@@ -16,13 +17,22 @@ them to ``FedEngine(..., selector=..., aggregator=...)``.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Protocol, runtime_checkable
+from typing import TYPE_CHECKING, Optional, Protocol, Sequence, Union, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.federated.costs import CostMeter, DelayModel, embed_sync_bytes, model_bytes
+from repro.federated.costs import (
+    BYTES_F32,
+    CostMeter,
+    DelayModel,
+    VirtualClock,
+    model_bytes,
+    seq_sum,
+)
 from repro.federated.server import fedavg, fedavg_weighted, select_clients, update_tau
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -98,6 +108,8 @@ class Aggregator(Protocol):
 class FedAvg:
     """Unweighted mean over the selected clients — Algorithm 1 line 7."""
 
+    uses_weights = False
+
     def aggregate(self, stacked_params, weights=None):
         return fedavg(stacked_params)
 
@@ -106,10 +118,70 @@ class WeightedFedAvg:
     """Dataset-size-weighted FedAvg (McMahan et al.); the engine passes
     ``fed.client_sizes[sel]`` as the weights."""
 
+    uses_weights = True
+
     def aggregate(self, stacked_params, weights=None):
         if weights is None:
             raise ValueError("WeightedFedAvg needs per-client weights")
         return fedavg_weighted(stacked_params, jnp.asarray(weights, jnp.float32))
+
+
+def staleness_discount(staleness, *, mode: str = "poly", a: float = 0.5) -> np.ndarray:
+    """FedAsync-style staleness discount s(τ) for late-merging updates.
+
+    ``poly``  s(τ) = (1 + τ)^-a      (FedAsync's polynomial family)
+    ``exp``   s(τ) = exp(-a τ)
+    ``const`` s(τ) = 1               (FedBuff: uniform buffer average)
+    """
+    s = np.asarray(staleness, np.float64)
+    if mode == "poly":
+        return (1.0 + s) ** -a
+    if mode == "exp":
+        return np.exp(-a * s)
+    if mode == "const":
+        return np.ones_like(s)
+    raise ValueError(f"unknown staleness mode {mode!r}; known: poly|exp|const")
+
+
+@dataclass
+class StalenessWeightedAggregator:
+    """Wraps a base Aggregator with multiplicative staleness discounts.
+
+    An update dispatched at server version v and merged at version V has
+    staleness τ = V - v; its aggregation weight is scaled by s(τ) (see
+    ``staleness_discount``), composed with the base aggregator's own weights
+    when it uses them (e.g. client sizes for WeightedFedAvg). When every
+    update is fresh (all τ = 0, so every s(τ) = 1) the merge delegates to the
+    base aggregator unchanged — this is what makes a full-quorum
+    AsyncScheduler bit-identical to the synchronous engine.
+    """
+
+    base: "Aggregator" = field(default_factory=FedAvg)
+    mode: str = "poly"
+    a: float = 0.5
+
+    uses_weights = True
+
+    def aggregate(self, stacked_params, weights=None, staleness=None):
+        if staleness is None:
+            return self.base.aggregate(stacked_params, weights)
+        d = staleness_discount(staleness, mode=self.mode, a=self.a)
+        if d.size and float(d.min()) == 1.0:   # all fresh: exactly the base merge
+            return self.base.aggregate(stacked_params, weights)
+        # a stale merge becomes a discounted weighted mean — only valid for
+        # mean-family bases; a custom rule (median, trimmed mean, ...) must
+        # declare how it composes rather than being silently replaced
+        uses_weights = getattr(self.base, "uses_weights", None)
+        if uses_weights is None:
+            raise TypeError(
+                f"{type(self.base).__name__} does not declare `uses_weights`; "
+                "StalenessWeightedAggregator can only fold discounts into "
+                "mean-family aggregators — set `uses_weights` on the base "
+                "(True to compose with its weights, False for a plain "
+                "discounted mean) or implement staleness in the base itself")
+        if uses_weights and weights is not None:
+            d = d * np.asarray(weights, np.float64)
+        return fedavg_weighted(stacked_params, jnp.asarray(d, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -157,41 +229,239 @@ class CostModel(Protocol):
                    sel: np.ndarray, stats: dict) -> CostMeter:
         ...
 
+    # Required by AsyncScheduler (which prices per-client finish times and
+    # bills merges against a virtual clock instead of max(compute) + sync):
+
+    def client_compute_times(self, engine: "FedEngine", state: "EngineState",
+                             sel: np.ndarray, stats: dict) -> np.ndarray:
+        ...
+
+    def sync_overhead(self, engine: "FedEngine", sel: np.ndarray,
+                      stats: dict) -> float:
+        ...
+
 
 @dataclass
 class PaperCostModel:
-    """The paper's analytic byte/FLOP/delay accounting (Fig. 3/4 axes),
-    lifted verbatim from the legacy loop. Method-specific extras (FedSage+
-    generator traffic/compute) come from the strategy's cost hooks, keeping
-    this model branch-free."""
+    """The paper's analytic byte/FLOP/delay accounting (Fig. 3/4 axes).
+    Method-specific extras (FedSage+ generator traffic/compute) come from the
+    strategy's cost hooks, keeping this model branch-free.
+
+    Per-client quantities are numpy-vectorized over the selected clients (the
+    legacy O(m) Python loop capped scaling at hundreds of clients); meters
+    accumulate with ``seq_sum`` so totals stay bit-identical to the loop
+    (tests/test_async.py pins this).
+    """
 
     delay: DelayModel = field(default_factory=DelayModel)
 
+    # ---- vectorized per-client pieces (shared by the synchronous meter and
+    # the async virtual clock) ----
+
+    def client_flops(self, engine, sel, stats) -> np.ndarray:
+        sizes = np.asarray(engine.fed.client_sizes[sel], np.int64)
+        nodes = sizes + engine.mcfg.local_epochs * np.minimum(
+            engine.bsz, np.maximum(sizes, 1))
+        return 3.0 * engine.fwd_flops_node * nodes \
+            + engine.strategy.extra_flops(engine, sizes)
+
+    def client_embed_bytes(self, engine, stats) -> np.ndarray:
+        # vector form of embed_sync_bytes(n_pulled[i], (F, H1)), same
+        # left-to-right operand order so each element rounds identically
+        n_pulled = np.asarray(stats["n_ghost_pulled"], np.float64)
+        return n_pulled * sum((engine.F, engine.H1)) * BYTES_F32
+
+    def client_compute_times(self, engine, state, sel, stats) -> np.ndarray:
+        """Per-client local compute time this round (seconds, float64)."""
+        return np.asarray(
+            self.delay.compute_time(self.client_flops(engine, sel, stats)),
+            np.float64)
+
+    def sync_overhead(self, engine, sel, stats) -> float:
+        """The per-merge server-side communication overhead ``o`` (seconds);
+        the wall-clock meter amortizes it by the sync interval tau."""
+        embed_total = seq_sum(self.client_embed_bytes(engine, stats))
+        return self.delay.comm_time(
+            embed_total / max(len(sel), 1) + 2 * model_bytes(engine.n_params))
+
     def round_cost(self, engine, state, sel, stats):
-        fed, mcfg = engine.fed, engine.mcfg
         cost = CostMeter()
-        n_sync = np.asarray(stats["n_sync"])
-        n_pulled = np.asarray(stats["n_ghost_pulled"])
-        sizes = fed.client_sizes[sel]
-        extra_bytes = engine.strategy.round_model_bytes(engine)
-        per_client_compute = []
-        for i, _k in enumerate(sel):
-            comm_model = 2 * model_bytes(engine.n_params) + extra_bytes
-            comm_embed = embed_sync_bytes(n_pulled[i], (engine.F, engine.H1))
-            nodes_processed = sizes[i] + mcfg.local_epochs * min(
-                engine.bsz, max(int(sizes[i]), 1))
-            flops = 3.0 * engine.fwd_flops_node * nodes_processed \
-                + engine.strategy.extra_flops(engine, sizes[i])
-            cost.comm_model_bytes += comm_model
-            cost.comm_embed_bytes += comm_embed
-            cost.compute_flops += flops
-            per_client_compute.append(self.delay.compute_time(flops))
+        m = len(sel)
+        comm_model = 2 * model_bytes(engine.n_params) \
+            + engine.strategy.round_model_bytes(engine)
+        comm_embed = self.client_embed_bytes(engine, stats)
+        flops = self.client_flops(engine, sel, stats)
+        cost.comm_model_bytes += seq_sum(np.full(m, comm_model))
+        cost.comm_embed_bytes += seq_sum(comm_embed)
+        cost.compute_flops += seq_sum(flops)
         o = self.delay.comm_time(
-            cost.comm_embed_bytes / max(len(sel), 1)
+            cost.comm_embed_bytes / max(m, 1)
             + 2 * model_bytes(engine.n_params))
-        cost.wall_clock_s = max(per_client_compute) + o / max(state.tau, 1)
-        cost.sync_events = int(n_sync.sum())
+        per_client_compute = self.delay.compute_time(flops)
+        cost.wall_clock_s = float(np.max(per_client_compute)) + o / max(state.tau, 1)
+        cost.sync_events = int(np.asarray(stats["n_sync"]).sum())
         return cost
+
+
+# ---------------------------------------------------------------------------
+# round scheduling (lockstep vs buffered-async)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class RoundScheduler(Protocol):
+    """Owns the execution structure of a run: when cohorts dispatch, when
+    updates merge, and what wall-clock a merge bills. The engine exposes the
+    two halves of a round (``dispatch`` = client work, ``merge`` = server
+    work) and the scheduler sequences them."""
+
+    def run(self, engine: "FedEngine", state: "EngineState") -> None:
+        ...
+
+
+class SyncScheduler:
+    """The paper's lockstep loop: every round dispatches a fresh cohort and
+    blocks until all of it merges. Reproduces the legacy ``run_federated``
+    round loop bit-for-bit."""
+
+    def run(self, engine, state):
+        for t in range(engine.rounds):
+            if engine.run_round(state, t):
+                break
+
+
+@dataclass
+class AsyncScheduler:
+    """Buffered-staleness asynchronous rounds (FedAsync/FedBuff-style).
+
+    ``concurrency`` clients are always in flight. Each dispatched client
+    finishes at a virtual time priced by the engine's cost model (per-client
+    compute time, optionally scaled by a per-client ``speed_factors``
+    multiplier). Arrivals buffer at the server; once ``quorum`` of them are
+    in, the server merges the buffer with staleness-discounted aggregation
+    weights (see StalenessWeightedAggregator), advances one version, bills
+    only the time it actually waited (VirtualClock), and re-dispatches that
+    many fresh clients from the new global model. Stragglers keep training
+    on the model version they departed with and merge late with staleness
+    τ = merge_version - dispatch_version.
+
+    With ``quorum == concurrency`` and homogeneous speed factors every merge
+    is a full fresh cohort — history-identical to SyncScheduler, pinned by
+    tests/test_async.py.
+    """
+
+    quorum: Optional[int] = None          # arrivals per merge; None -> concurrency
+    concurrency: Optional[int] = None     # clients in flight; None -> clients_per_round
+    staleness_mode: str = "poly"
+    staleness_a: float = 0.5
+    speed_factors: Optional[Union[Sequence[float], np.ndarray]] = None
+
+    def run(self, engine, state):
+        M = self.concurrency if self.concurrency is not None else engine.clients_per_round
+        Q = self.quorum if self.quorum is not None else M
+        if not 1 <= Q <= M:
+            raise ValueError(f"quorum {Q} must be in [1, concurrency {M}]")
+        if self.speed_factors is None:
+            factors = np.ones(engine.fed.n_clients, np.float64)
+        else:
+            factors = np.asarray(self.speed_factors, np.float64)
+            if factors.shape != (engine.fed.n_clients,):
+                raise ValueError(
+                    f"speed_factors must have shape ({engine.fed.n_clients},), "
+                    f"got {factors.shape}")
+        agg = engine.aggregator
+        if isinstance(agg, StalenessWeightedAggregator):
+            # same fail-fast contract as the engine's delay/cost_model knobs:
+            # the scheduler's staleness knobs only parameterize its default
+            # wrapper, never an explicitly staleness-aware aggregator
+            if (self.staleness_mode, self.staleness_a) != ("poly", 0.5):
+                raise ValueError(
+                    "staleness_mode/staleness_a only configure the "
+                    "scheduler's default wrapper; the engine aggregator is "
+                    "already a StalenessWeightedAggregator — set mode/a on "
+                    "it instead")
+        else:
+            agg = StalenessWeightedAggregator(
+                base=agg, mode=self.staleness_mode, a=self.staleness_a)
+
+        clock = VirtualClock()
+        heap: list = []          # (arrival_time, seq, entry) — seq: stable ties
+        seq = 0
+        version = 0              # server model version (merge count)
+
+        def dispatch_cohort(m: int) -> None:
+            nonlocal seq
+            saved = engine.clients_per_round
+            engine.clients_per_round = m    # selectors size cohorts from this
+            try:
+                sel = np.asarray(engine.selector.select(engine, state))
+            finally:
+                engine.clients_per_round = saved
+            out = engine.dispatch(state, sel, version)
+            times = engine.cost_model.client_compute_times(engine, state, sel, out[-1])
+            for pos, cli in enumerate(sel):
+                rel = float(times[pos]) * float(factors[cli])
+                entry = dict(version=version, pos=pos, client=int(cli),
+                             cohort=len(sel), out=out, rel_time=rel,
+                             dispatch_time=clock.now)
+                heapq.heappush(heap, (clock.now + rel, seq, entry))
+                seq += 1
+
+        if engine.rounds <= 0:
+            return    # SyncScheduler is a no-op here too; don't burn a cohort
+        dispatch_cohort(M)
+        buffer: list = []
+        t = 0
+        while t < engine.rounds and heap:
+            _, _, entry = heapq.heappop(heap)
+            buffer.append(entry)
+            if len(buffer) < Q:
+                continue
+            last = entry                       # the quorum-completing arrival
+            # canonical merge order (dispatch version, cohort position): a
+            # deterministic restack, and for a single full cohort exactly the
+            # dispatch order the synchronous engine aggregates in
+            entries = sorted(buffer, key=lambda e: (e["version"], e["pos"]))
+            buffer = []
+            sel = np.asarray([e["client"] for e in entries])
+            if (len({e["version"] for e in entries}) == 1
+                    and [e["pos"] for e in entries]
+                    == list(range(entries[0]["cohort"]))):
+                out = entries[0]["out"]        # one whole cohort: reuse as-is
+            else:
+                rows = [jax.tree_util.tree_map(lambda x, i=e["pos"]: x[i], e["out"])
+                        for e in entries]
+                out = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+            staleness = np.asarray([version - e["version"] for e in entries])
+            o = engine.cost_model.sync_overhead(engine, sel, out[-1])
+            elapsed = clock.merge_elapsed(
+                last["dispatch_time"], last["rel_time"], o / max(state.tau, 1))
+            stop = engine.merge(
+                state, t, sel, out, staleness=staleness, aggregator=agg,
+                wall_clock_s=elapsed, virtual_time=clock.now)
+            version += 1
+            t += 1
+            if stop:
+                break
+            if t < engine.rounds:
+                dispatch_cohort(len(entries))
+
+        # Bill work that was dispatched but never merged (in flight or
+        # buffered when the run ended): those model downloads, embedding
+        # pulls, and local epochs really ran, so comm/compute meters must
+        # count them — only wall-clock is forgiven, since the run ended at
+        # the last merge and their remaining time overlapped it. With a full
+        # quorum nothing is ever left over, keeping sync parity exact.
+        leftovers = buffer + [e for _, _, e in heap]
+        if leftovers:
+            leftovers.sort(key=lambda e: (e["version"], e["pos"]))
+            sel = np.asarray([e["client"] for e in leftovers])
+            rows = [jax.tree_util.tree_map(lambda x, i=e["pos"]: x[i],
+                                           e["out"][-1])
+                    for e in leftovers]
+            stats = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+            cost = engine.cost_model.round_cost(engine, state, sel, stats)
+            cost.wall_clock_s = 0.0
+            state.result.costs.add(cost)
 
 
 # ---------------------------------------------------------------------------

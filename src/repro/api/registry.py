@@ -17,7 +17,15 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Mapping
 
-from repro.api.protocols import Aggregator, FedAvg, WeightedFedAvg
+from repro.api.protocols import (
+    Aggregator,
+    AsyncScheduler,
+    FedAvg,
+    RoundScheduler,
+    StalenessWeightedAggregator,
+    SyncScheduler,
+    WeightedFedAvg,
+)
 from repro.api.strategies import build_strategy  # re-exported  # noqa: F401
 from repro.core.fedais import MethodConfig
 
@@ -87,6 +95,38 @@ def build_aggregator(name: str) -> Aggregator:
 
 register_aggregator("fedavg", FedAvg)
 register_aggregator("weighted", WeightedFedAvg)
+register_aggregator("staleness", StalenessWeightedAggregator)
+
+
+# ---------------------------------------------------------------------------
+# scheduler registry (exposed through MethodConfig.scheduler or the
+# FedEngine ``scheduler=`` kwarg — a key, a factory product, or an instance)
+# ---------------------------------------------------------------------------
+
+_SCHEDULERS: dict[str, Callable[..., RoundScheduler]] = {}
+
+
+def register_scheduler(name: str, factory: Callable[..., RoundScheduler],
+                       *, overwrite: bool = False) -> None:
+    if name in _SCHEDULERS and not overwrite:
+        raise KeyError(f"scheduler {name!r} already registered")
+    _SCHEDULERS[name] = factory
+
+
+def available_schedulers() -> tuple[str, ...]:
+    return tuple(sorted(_SCHEDULERS))
+
+
+def build_scheduler(name: str, **kwargs) -> RoundScheduler:
+    """Resolve a registered scheduler key; kwargs go to the factory
+    (e.g. ``build_scheduler("async", quorum=4)``)."""
+    if name not in _SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; known: {sorted(_SCHEDULERS)}")
+    return _SCHEDULERS[name](**kwargs)
+
+
+register_scheduler("sync", SyncScheduler)
+register_scheduler("async", AsyncScheduler)
 
 
 # ---------------------------------------------------------------------------

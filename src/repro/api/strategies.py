@@ -51,8 +51,11 @@ class MethodStrategy:
         """Extra per-client model-channel bytes (rides the up/down-link)."""
         return 0.0
 
-    def extra_flops(self, engine: "FedEngine", client_size: int) -> float:
-        """Extra per-client compute on top of the GCN fwd+bwd."""
+    def extra_flops(self, engine: "FedEngine", client_size):
+        """Extra per-client compute on top of the GCN fwd+bwd. ``client_size``
+        may be a scalar or an int ndarray over the cohort (the vectorized
+        cost model passes the whole selection at once); implementations must
+        be elementwise arithmetic."""
         return 0.0
 
 

@@ -43,6 +43,7 @@ class MethodConfig:
     # repro.api resolution hooks (string keys into the api registries):
     strategy: str = "auto"               # method-strategy kind; "auto" infers
     aggregator: str = "fedavg"           # server aggregation ("fedavg"|"weighted")
+    scheduler: str = "sync"              # round scheduling ("sync"|"async")
 
 
 def batch_size_for(mcfg: MethodConfig, n_max: int) -> int:

@@ -32,16 +32,40 @@ def importance_probs(scores: jnp.ndarray, mask: jnp.ndarray, *, floor: float = 1
     return s / total
 
 
+QUANTIZE_DROP_BITS = 12   # float32 mantissa bits zeroed from the sampling key
+
+
+def quantize_key(x: jnp.ndarray, drop_bits: int = QUANTIZE_DROP_BITS) -> jnp.ndarray:
+    """Zero the low ``drop_bits`` mantissa bits of a float32 array.
+
+    Keys that differ only in the last few ULPs (backend/codegen FP jitter in
+    the upstream loss pass) collapse onto the same grid point, so ordering
+    decisions made on quantized keys are insensitive to that jitter. The
+    remaining 23 - drop_bits mantissa bits still give a ~2^-11 relative grid —
+    far finer than any meaningful score difference between two nodes.
+    """
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    keep = jnp.uint32(0xFFFFFFFF & ~((1 << drop_bits) - 1))
+    return jax.lax.bitcast_convert_type(u & keep, jnp.float32)
+
+
 def sample_batch(key, probs: jnp.ndarray, batch_size: int, mask: jnp.ndarray):
     """Sample ``batch_size`` distinct node indices with P(v) ∝ probs.
 
     Gumbel-top-k gives distinct draws proportional to probs without
     materialising the full categorical-without-replacement chain; masked
     entries can never win. Returns (idx (b,), valid (b,)).
+
+    The perturbed key is mantissa-quantized and ranked by ``lax.top_k``
+    (stable: equal keys resolve to the lower index), i.e. a stable argsort on
+    a jitter-insensitive key. Exact float ordering of the raw scores would let
+    last-ULP FP differences in the loss pass flip which node wins a near-tie
+    and silently fork the whole comm/acc trajectory between runs; the Gumbel
+    noise itself is counter-based PRNG output and already bit-exact.
     """
     logp = jnp.log(jnp.maximum(probs, 1e-30)) + jnp.where(mask > 0, 0.0, -1e30)
     g = -jnp.log(-jnp.log(jax.random.uniform(key, probs.shape, minval=1e-20, maxval=1.0)))
-    _, idx = jax.lax.top_k(logp + g, batch_size)
+    _, idx = jax.lax.top_k(quantize_key(logp + g), batch_size)
     valid = mask[idx] > 0   # clients smaller than batch_size yield padded picks
     return idx, valid
 

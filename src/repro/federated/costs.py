@@ -8,7 +8,18 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 BYTES_F32 = 4
+
+
+def seq_sum(x) -> float:
+    """Left-to-right float64 sum, bit-identical to a Python accumulation loop
+    starting from 0.0 (np.sum's pairwise blocking rounds differently). Lets
+    the cost model vectorize per-client accounting without perturbing meters
+    that tests and benchmarks pin exactly."""
+    arr = np.asarray(x, np.float64).ravel()
+    return float(arr.cumsum()[-1]) if arr.size else 0.0
 
 
 @dataclass
@@ -55,6 +66,35 @@ class DelayModel:
 
     def comm_time(self, bytes_: float) -> float:
         return self.latency_s + bytes_ / self.bandwidth_bytes_per_s
+
+
+@dataclass
+class VirtualClock:
+    """Server-side virtual clock for overlapped (asynchronous) rounds.
+
+    Synchronous accounting bills ``max(client compute) + sync overhead`` per
+    round: every client blocks until the slowest finishes. Under overlap the
+    server keeps clients in flight across merges, so a merge bills only the
+    wait from the previous merge completion (``now``) until the
+    quorum-completing update arrived, plus the server-side overhead.
+
+    ``merge_elapsed`` works from the arriving update's *relative* client time
+    rather than subtracting absolute timestamps: when the update was
+    dispatched exactly at ``now`` (no overlap — the synchronous regime) the
+    billed time is bit-identical to the synchronous meter's
+    ``max(compute) + overhead``, which is what pins the async/sync parity
+    test.
+    """
+
+    now: float = 0.0
+
+    def merge_elapsed(self, dispatch_time: float, client_time: float,
+                      overhead: float) -> float:
+        """Advance past a merge; returns the wall-clock billed to it."""
+        wait = (dispatch_time - self.now) + client_time
+        elapsed = max(wait, 0.0) + overhead
+        self.now += elapsed
+        return elapsed
 
 
 def model_bytes(n_params: int) -> float:

@@ -1,0 +1,349 @@
+"""Tests for round scheduling: SyncScheduler/AsyncScheduler parity, the
+staleness-weighted aggregation, the virtual clock, the scheduler registry,
+and the vectorized PaperCostModel against the original per-client loop."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    AsyncScheduler,
+    BaseCallback,
+    EvalCallback,
+    FedAvg,
+    FedEngine,
+    HistoryCallback,
+    PaperCostModel,
+    RoundScheduler,
+    StalenessWeightedAggregator,
+    SyncScheduler,
+    WeightedFedAvg,
+    available_schedulers,
+    build_scheduler,
+    method_config,
+    register_scheduler,
+    staleness_discount,
+)
+from repro.federated.costs import (
+    BYTES_F32,
+    CostMeter,
+    VirtualClock,
+    embed_sync_bytes,
+    model_bytes,
+    seq_sum,
+)
+
+PARITY_KEYS = ("test_acc", "test_loss", "tau", "comm_total", "comm_embed",
+               "flops", "wall_clock")
+
+
+# ---------------------------------------------------------------------------
+# async/sync parity (the scheduler's correctness contract)
+# ---------------------------------------------------------------------------
+
+def test_async_full_quorum_matches_sync_bitwise(small_fed):
+    """Zero delay heterogeneity + full quorum: every merge is one whole fresh
+    cohort, so the async engine must reproduce the synchronous history
+    bit-for-bit (trajectory, costs, and final snapshot)."""
+    g, fed = small_fed
+    mcfg = method_config("fedais", tau0=4)
+    kw = dict(rounds=3, clients_per_round=3, seed=0)
+    sync = FedEngine(g, fed, mcfg, **kw).run()
+    asy = FedEngine(g, fed, mcfg, scheduler=AsyncScheduler(), **kw).run()
+    for k in PARITY_KEYS:
+        assert sync.history[k] == asy.history[k], f"history[{k!r}] diverged"
+    assert sync.final == asy.final
+    # async extras exist and report an all-fresh run
+    assert asy.history["staleness_max"] == [0, 0, 0]
+    assert asy.history["merged"] == [3, 3, 3]
+    # the virtual clock reproduces the (cumulative) lockstep wall-clock meter
+    assert asy.history["virtual_time"] == sync.history["wall_clock"]
+
+
+def test_async_heterogeneous_delays_overlap(small_fed):
+    """Partial quorum + heterogeneous client speeds: stragglers merge late
+    (staleness > 0) and the overlapped wall-clock beats lockstep billing."""
+    g, fed = small_fed
+    mcfg = method_config("fedais", tau0=4)
+    kw = dict(rounds=3, clients_per_round=3, seed=0)
+    rng = np.random.default_rng(0)
+    factors = np.exp(rng.normal(0.0, 0.8, fed.n_clients))
+    sync = FedEngine(g, fed, mcfg, **kw).run()
+    het = FedEngine(g, fed, mcfg, **kw,
+                    scheduler=AsyncScheduler(quorum=2, speed_factors=factors)).run()
+    assert max(het.history["staleness_max"]) >= 1
+    assert het.history["merged"] == [2, 2, 2]
+    assert het.history["wall_clock"][-1] < sync.history["wall_clock"][-1]
+    # virtual clock is monotone and matches the cumulative wall-clock meter
+    assert het.history["virtual_time"] == het.history["wall_clock"]
+    assert all(np.isfinite(het.history["test_loss"]))
+
+
+def test_async_scheduler_via_method_config_and_registry(small_fed):
+    g, fed = small_fed
+    eng = FedEngine(g, fed, method_config("fedais", scheduler="async"), rounds=1)
+    assert isinstance(eng.scheduler, AsyncScheduler)
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, scheduler="sync")
+    assert isinstance(eng.scheduler, SyncScheduler)
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        FedEngine(g, fed, method_config("fedais"), rounds=1, scheduler="bogus")
+
+
+def test_scheduler_registry():
+    assert set(available_schedulers()) >= {"sync", "async"}
+    assert isinstance(build_scheduler("sync"), SyncScheduler)
+    sched = build_scheduler("async", quorum=4)
+    assert isinstance(sched, AsyncScheduler) and sched.quorum == 4
+    assert isinstance(build_scheduler("async"), RoundScheduler)
+    with pytest.raises(KeyError, match="already registered"):
+        register_scheduler("sync", SyncScheduler)
+
+
+def test_async_scheduler_validation(small_fed):
+    g, fed = small_fed
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, clients_per_round=3)
+    state = eng.init_state()
+    with pytest.raises(ValueError, match="quorum"):
+        AsyncScheduler(quorum=5).run(eng, state)
+    with pytest.raises(ValueError, match="speed_factors"):
+        AsyncScheduler(speed_factors=np.ones(3)).run(eng, state)
+
+
+def test_async_scheduler_rejects_conflicting_staleness_config(small_fed):
+    """Scheduler staleness knobs only parameterize its default wrapper; with
+    an explicitly staleness-aware engine aggregator they must fail fast, not
+    be silently discarded."""
+    g, fed = small_fed
+    eng = FedEngine(g, fed, method_config("fedais", aggregator="staleness"),
+                    rounds=1, clients_per_round=3)
+    state = eng.init_state()
+    with pytest.raises(ValueError, match="already a StalenessWeightedAggregator"):
+        AsyncScheduler(staleness_mode="exp", staleness_a=1.0).run(eng, state)
+    # default knobs defer to the aggregator's own configuration: runs fine
+    res = FedEngine(g, fed, method_config("fedais", aggregator="staleness"),
+                    rounds=1, clients_per_round=3, seed=0,
+                    scheduler=AsyncScheduler()).run()
+    assert np.isfinite(res.final["loss"])
+
+
+def test_async_rounds_zero_is_noop(small_fed):
+    """rounds=0 must not burn (or even dispatch) a cohort — SyncScheduler is
+    a no-op there and the async engine must match, RNG state included."""
+    g, fed = small_fed
+    kw = dict(rounds=0, clients_per_round=3, seed=0)
+    sync = FedEngine(g, fed, method_config("fedais"), **kw).run()
+    asy = FedEngine(g, fed, method_config("fedais"), **kw,
+                    scheduler=AsyncScheduler()).run()
+    assert asy.history == {} == sync.history
+    assert asy.final == sync.final
+    assert asy.final["comm_total_bytes"] == 0.0
+
+
+def test_async_bills_unmerged_dispatches(small_fed):
+    """Every dispatched update's comm/compute is billed even if the run ends
+    before it merges; only merged updates appear in the history rows."""
+    g, fed = small_fed
+    res = FedEngine(g, fed, method_config("fedais"), rounds=2,
+                    clients_per_round=3, seed=0,
+                    scheduler=AsyncScheduler(quorum=2)).run()
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=2,
+                    clients_per_round=3)
+    from repro.federated.costs import model_bytes
+
+    # dispatched: 3 (initial) + 2 (after merge 1) = 5; merged: 2 + 2 = 4
+    assert res.final["comm_model_bytes"] == 5 * 2 * model_bytes(eng.n_params)
+    assert res.history["comm_total"][-1] < res.final["comm_total_bytes"]
+    assert res.history["merged"] == [2, 2]
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting
+# ---------------------------------------------------------------------------
+
+def test_staleness_discount_modes():
+    s = np.asarray([0, 1, 3])
+    np.testing.assert_allclose(staleness_discount(s, mode="poly", a=0.5),
+                               [1.0, 2 ** -0.5, 0.5])
+    np.testing.assert_allclose(staleness_discount(s, mode="exp", a=1.0),
+                               np.exp([-0.0, -1.0, -3.0]))
+    np.testing.assert_allclose(staleness_discount(s, mode="const"), [1, 1, 1])
+    with pytest.raises(ValueError, match="staleness mode"):
+        staleness_discount(s, mode="nope")
+
+
+def test_staleness_aggregator_fresh_delegates_to_base():
+    stacked = {"w": jnp.asarray([[0.0], [10.0]])}
+    agg = StalenessWeightedAggregator(base=FedAvg())
+    out = agg.aggregate(stacked, None, np.asarray([0, 0]))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(FedAvg().aggregate(stacked)["w"]))
+    # no staleness argument at all behaves like the base too
+    np.testing.assert_array_equal(np.asarray(agg.aggregate(stacked)["w"]), [5.0])
+
+
+def test_staleness_aggregator_discounts_stale_updates():
+    stacked = {"w": jnp.asarray([[0.0], [10.0]])}
+    agg = StalenessWeightedAggregator(base=FedAvg(), mode="poly", a=1.0)
+    # second update has staleness 3 -> weight 1/4; mean = 10*(0.25/1.25) = 2.0
+    out = agg.aggregate(stacked, None, np.asarray([0, 3]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0], rtol=1e-6)
+
+
+def test_staleness_aggregator_rejects_undeclared_custom_base():
+    """A base without `uses_weights` (median, trimmed mean, ...) cannot be
+    silently replaced by a weighted mean on stale merges — fresh merges
+    delegate, stale ones fail fast."""
+    class Median:
+        def aggregate(self, stacked_params, weights=None):
+            return {"w": jnp.median(stacked_params["w"], axis=0)}
+
+    stacked = {"w": jnp.asarray([[0.0], [10.0], [20.0]])}
+    agg = StalenessWeightedAggregator(base=Median())
+    np.testing.assert_array_equal(
+        np.asarray(agg.aggregate(stacked, None, np.asarray([0, 0, 0]))["w"]),
+        [10.0])   # all fresh: the base rule applies
+    with pytest.raises(TypeError, match="uses_weights"):
+        agg.aggregate(stacked, None, np.asarray([0, 2, 0]))
+
+
+def test_staleness_aggregator_composes_with_base_weights():
+    stacked = {"w": jnp.asarray([[0.0], [10.0]])}
+    agg = StalenessWeightedAggregator(base=WeightedFedAvg(), mode="poly", a=1.0)
+    # base weights (1, 3), staleness (0, 1) -> effective (1, 1.5)
+    out = agg.aggregate(stacked, jnp.asarray([1.0, 3.0]), np.asarray([0, 1]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [6.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_no_overlap_bills_like_sync():
+    clock = VirtualClock()
+    # dispatched exactly at now: billed time is client_time + overhead, the
+    # synchronous formula, with no float round-trip through absolute times
+    assert clock.merge_elapsed(0.0, 0.125, 0.25) == 0.125 + 0.25
+    assert clock.now == 0.375
+    assert clock.merge_elapsed(clock.now, 0.5, 0.1) == 0.5 + 0.1
+
+
+def test_virtual_clock_buffered_arrival_bills_overhead_only():
+    clock = VirtualClock(now=10.0)
+    # the quorum-completing update arrived before the previous merge ended
+    assert clock.merge_elapsed(8.0, 1.0, 0.25) == 0.25
+    assert clock.now == 10.25
+
+
+# ---------------------------------------------------------------------------
+# vectorized PaperCostModel vs the original O(m) per-client loop
+# ---------------------------------------------------------------------------
+
+def _loop_round_cost(model, engine, state, sel, stats):
+    """The pre-vectorization PaperCostModel.round_cost, verbatim."""
+    fed, mcfg = engine.fed, engine.mcfg
+    cost = CostMeter()
+    n_sync = np.asarray(stats["n_sync"])
+    n_pulled = np.asarray(stats["n_ghost_pulled"])
+    sizes = fed.client_sizes[sel]
+    extra_bytes = engine.strategy.round_model_bytes(engine)
+    per_client_compute = []
+    for i, _k in enumerate(sel):
+        comm_model = 2 * model_bytes(engine.n_params) + extra_bytes
+        comm_embed = embed_sync_bytes(n_pulled[i], (engine.F, engine.H1))
+        nodes_processed = sizes[i] + mcfg.local_epochs * min(
+            engine.bsz, max(int(sizes[i]), 1))
+        flops = 3.0 * engine.fwd_flops_node * nodes_processed \
+            + engine.strategy.extra_flops(engine, sizes[i])
+        cost.comm_model_bytes += comm_model
+        cost.comm_embed_bytes += comm_embed
+        cost.compute_flops += flops
+        per_client_compute.append(model.delay.compute_time(flops))
+    o = model.delay.comm_time(
+        cost.comm_embed_bytes / max(len(sel), 1)
+        + 2 * model_bytes(engine.n_params))
+    cost.wall_clock_s = max(per_client_compute) + o / max(state.tau, 1)
+    cost.sync_events = int(n_sync.sum())
+    return cost
+
+
+class _RecordingCostModel(PaperCostModel):
+    def __init__(self):
+        super().__init__()
+        self.calls = []
+
+    def round_cost(self, engine, state, sel, stats):
+        cost = super().round_cost(engine, state, sel, stats)
+        self.calls.append((np.asarray(sel).copy(), stats, state.tau, cost))
+        return cost
+
+
+@pytest.mark.parametrize("method", ["fedais", "fedsage+"])
+def test_vectorized_round_cost_matches_loop_exactly(small_fed, method):
+    """The numpy-vectorized meter must equal the per-client Python loop
+    bit-for-bit on real engine traffic (incl. the generator's extra costs)."""
+    g, fed = small_fed
+    model = _RecordingCostModel()
+    eng = FedEngine(g, fed, method_config(method, tau0=2), rounds=2,
+                    clients_per_round=4, seed=0, cost_model=model)
+    eng.run()
+    state = eng.init_state()   # only .tau is read by the cost model
+    assert model.calls
+    for sel, stats, tau, vec_cost in model.calls:
+        state.tau = tau
+        ref = _loop_round_cost(model, eng, state, sel, stats)
+        assert vec_cost.comm_model_bytes == ref.comm_model_bytes
+        assert vec_cost.comm_embed_bytes == ref.comm_embed_bytes
+        assert vec_cost.compute_flops == ref.compute_flops
+        assert vec_cost.wall_clock_s == ref.wall_clock_s
+        assert vec_cost.sync_events == ref.sync_events
+
+
+def test_seq_sum_matches_python_accumulation():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(1000) * rng.uniform(1, 1e12, 1000)
+    acc = 0.0
+    for v in x:
+        acc += v
+    assert seq_sum(x) == acc
+    assert seq_sum([]) == 0.0
+    assert seq_sum(np.full(7, 0.1)) * BYTES_F32 == (0.1 + 0.1 + 0.1 + 0.1
+                                                    + 0.1 + 0.1 + 0.1) * 4
+
+
+# ---------------------------------------------------------------------------
+# final-eval reuse (no duplicate server eval on the last round)
+# ---------------------------------------------------------------------------
+
+def test_run_reuses_last_round_eval(small_fed, monkeypatch):
+    import repro.api.engine as engine_mod
+
+    g, fed = small_fed
+    calls = {"n": 0}
+    real = engine_mod.evaluate_global
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(engine_mod, "evaluate_global", counting)
+    # default stack: EvalCallback scores the last round; run() must not re-eval
+    res = FedEngine(g, fed, method_config("fedais"), rounds=2,
+                    clients_per_round=3, seed=0).run()
+    assert calls["n"] == 0          # callback evals route through callbacks.py
+    assert res.final["acc"] == res.history["test_acc"][-1]
+    assert res.final["loss"] == res.history["test_loss"][-1]
+
+    # a stack without EvalCallback leaves no cached eval: run() evaluates
+    calls["n"] = 0
+    res2 = FedEngine(g, fed, method_config("fedais"), rounds=1,
+                     clients_per_round=3, seed=0,
+                     callbacks=[BaseCallback()]).run()
+    assert calls["n"] == 1
+    assert np.isfinite(res2.final["loss"])
+
+
+def test_async_history_extras_absent_under_sync(small_fed):
+    g, fed = small_fed
+    res = FedEngine(g, fed, method_config("fedais"), rounds=1,
+                    clients_per_round=3, seed=0).run()
+    assert "staleness_max" not in res.history
+    assert "virtual_time" not in res.history
