@@ -1,0 +1,128 @@
+"""Round-throughput benchmark: fused scanned executor vs stepwise loop.
+
+The figure of merit is training-round throughput (rounds/s) of the
+SyncScheduler hot path — the number every selector/method sweep pays per
+grid point. The fused executor runs every round between eval boundaries as
+one donated ``lax.scan`` XLA call; the stepwise loop pays per-round
+dispatch, eager aggregation/write-back copies of the (K, n_tot, H1) tables,
+and a host sync for cost accounting. The eval-side hot spot (full-graph
+forward, O(N*K*F) per eval) is timed per aggregation backend alongside.
+
+Writes ``BENCH_round.json`` at the repo root (the perf trajectory seed) and
+``benchmarks/results/perf_round.json``. Exits non-zero from the CLI if the
+fused executor is not faster than stepwise — the CI perf-smoke gate.
+
+    PYTHONPATH=src python -m benchmarks.perf_round --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit_csv, fed_setup, save_rows
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _time_run(make_engine, repeats: int = 3) -> float:
+    """Median wall-clock of a full engine.run() after compile warmups."""
+    eng = make_engine()
+    eng.run()                                   # warmup 1: compiles
+    eng.run()                                   # warmup 2: allocator settles
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        eng.run()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run(quick: bool = True) -> list[dict]:
+    from repro.api import FedEngine, SyncScheduler, method_config
+    from repro.federated.server import build_eval_graph, evaluate_global
+    from repro.models.gcn import AGG_BACKENDS, gcn_init
+
+    # Cross-device regime: many clients, small sampled cohort. The stepwise
+    # loop's per-round cost is dominated by the eager full-table copies
+    # (hist1/age/ghost_feat scale with K, not with the cohort), which is
+    # exactly what the donated scanned executor eliminates.
+    ds = "pubmed"
+    scale = 16 if quick else 8
+    n_clients = 256
+    m = 4 if quick else 8
+    rounds = 20 if quick else 40
+    g, fed = fed_setup(ds, scale, n_clients, "0.5")
+    mcfg = method_config("fedais", tau0=4)
+
+    # eval only at the scan boundaries (round 0 + last): both variants pay
+    # the same two server evals, so the delta is pure round-loop overhead
+    def make(fused):
+        return FedEngine(g, fed, mcfg, rounds=rounds, clients_per_round=m,
+                         seed=0, eval_every=rounds,
+                         scheduler=SyncScheduler(fused=fused))
+
+    rows = []
+    secs = {}
+    for name, fused in (("stepwise", False), ("fused", True)):
+        dt = _time_run(lambda: make(fused))
+        secs[name] = dt
+        rows.append({
+            "variant": name,
+            "rounds": rounds,
+            "clients": n_clients,
+            "cohort": m,
+            "rounds_per_s": rounds / dt,
+            "ms_per_round": dt / rounds * 1e3,
+        })
+    speedup = secs["stepwise"] / secs["fused"]
+    rows[1]["speedup_vs_stepwise"] = speedup
+
+    # ---- eval aggregation backends (the per-round server-side hot spot) ----
+    params = gcn_init(jax.random.PRNGKey(0), g.n_features, g.n_classes)
+    for be in AGG_BACKENDS:
+        eg = build_eval_graph(g, backend=be)
+        evaluate_global(params, eg, "test")     # warmup/compile
+        t0 = time.perf_counter()
+        n_reps = 5
+        for _ in range(n_reps):
+            evaluate_global(params, eg, "test")
+        rows.append({
+            "variant": f"eval_{be}",
+            "ms_per_eval": (time.perf_counter() - t0) / n_reps * 1e3,
+        })
+
+    payload = {
+        "bench": "round_throughput",
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "fused_speedup": speedup,
+        "rows": rows,
+    }
+    with open(os.path.join(REPO_ROOT, "BENCH_round.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    emit_csv("perf_round", rows)
+    save_rows("perf_round", rows)
+    speedup = next(r["speedup_vs_stepwise"] for r in rows
+                   if r.get("speedup_vs_stepwise") is not None)
+    print(f"# fused speedup vs stepwise: {speedup:.2f}x")
+    if speedup < 1.0:
+        print("# FAIL: fused executor slower than the step-by-step loop")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,7 @@ BENCHMARKS = [
     "fig6_clients",      # paper Fig. 6
     "fig7_sensitivity",  # paper Fig. 7
     "fig8_async",        # extension: sync vs async scheduling wall-clock
+    "perf_round",        # round throughput: fused scanned executor vs stepwise
     "kernel_bench",      # kernel layer (us_per_call + oracle deltas)
     "roofline",          # §Roofline from the dry-run artifacts
 ]

@@ -8,9 +8,26 @@ The engine owns only the method-agnostic spine of a round:
 Everything method- or policy-specific is a pluggable component (see
 repro.api.protocols / strategies / callbacks / registry). The per-client
 LocalUpdate is jit-compiled once per MethodConfig and vmapped over the m
-selected clients, so one round = one XLA call; the cross-client ghost pull
-inside lowers to a gather over the stacked client axis (on a TPU mesh this
-is the all-to-all of the real deployment — see launch/fed_dryrun.py).
+selected clients; the cross-client ghost pull inside lowers to a gather
+over the stacked client axis (on a TPU mesh this is the all-to-all of the
+real deployment — see launch/fed_dryrun.py).
+
+Two executors share that compiled client step:
+
+* the **stepwise** path (``run_round`` = ``dispatch`` + ``merge``): one
+  XLA call per round plus eager host-side aggregation/write-back. The
+  AsyncScheduler's per-event loop always uses it.
+* the **fused** path (``run_fused``): the whole round — vmapped
+  LocalUpdate, aggregation, historical/ghost/prev_loss write-back — is one
+  traced ``round_step``, ``lax.scan``-ned across every round between eval
+  boundaries and jitted with ``donate_argnums`` on the big mutable buffers
+  (params, hist1, age, ghost_feat, prev_loss, PRNG key), so the (K, n_tot,
+  H1) tables update in place instead of being copied every round. Light
+  per-round stats stream out as stacked scan outputs and the host tail
+  (cost accounting, strategy.post_round, callbacks) replays them at the
+  chunk boundary — bit-identical history to the stepwise loop, pinned by
+  tests/test_fused.py. ``SyncScheduler`` auto-selects it whenever every
+  component declares itself fusable (see ``FedEngine.fused_eligibility``).
 
 ``repro.federated.simulator.run_federated`` is a thin compatibility shim
 over ``FedEngine(...).run()`` and is proven history-identical to the legacy
@@ -25,7 +42,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.callbacks import RoundContext, default_callbacks
+from repro.api.callbacks import (
+    EarlyStopCallback,
+    EvalCallback,
+    HistoryCallback,
+    RoundContext,
+    VerboseCallback,
+    default_callbacks,
+)
 from repro.api.protocols import (
     AdaptiveSyncController,
     PaperCostModel,
@@ -49,6 +73,18 @@ _CLIENT_ARRAY_KEYS = (
     "features", "labels", "node_mask", "train_mask",
     "nbr_idx", "nbr_mask", "ghost_owner", "ghost_row", "ghost_mask",
 )
+
+# Per-round stats streamed out of the fused scan (everything except the
+# (m, n_max) loss_all table, which stays in the on-device carry as prev_loss).
+_LIGHT_STATS = ("epoch_losses", "n_sync", "n_ghost_pulled",
+                "mean_importance_entropy")
+
+# Default-stack callbacks proven side-effect-free on non-eval rounds (they
+# only act when EvalCallback set ctx.metrics, i.e. at chunk boundaries) —
+# the exact types, not subclasses: an override could observe mid-chunk state
+# the fused executor no longer materializes per round.
+_FUSED_SAFE_CALLBACKS = (EvalCallback, HistoryCallback, VerboseCallback,
+                         EarlyStopCallback)
 
 
 @dataclass
@@ -126,6 +162,7 @@ class FedEngine:
         strategy=None,
         scheduler=None,
         callbacks: Optional[Sequence] = None,
+        eval_backend: str = "gather",
     ):
         self.graph, self.fed = graph, fed
         self.mcfg = method_config(method) if isinstance(method, str) else method
@@ -176,10 +213,17 @@ class FedEngine:
         self.fwd_flops_node = gcn_flops_per_node(self.F, fed.n_classes, avg_deg)
         self.bsz = batch_size_for(self.mcfg, fed.n_max)
         local_update = make_local_update(self.mcfg, fed.n_max, fed.g_max, self.H1)
-        self._vm = jax.jit(jax.vmap(
+        # the raw vmapped step is shared by both executors: the stepwise path
+        # jits it standalone, the fused path traces it inside the scanned
+        # round_step (same computation, one compilation each)
+        self._vm_raw = jax.vmap(
             local_update,
-            in_axes=(None, 0, None, None, 0, 0, 0, 0, None, 0, None, 0)))
-        self.eval_graph = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed)
+            in_axes=(None, 0, None, None, 0, 0, 0, 0, None, 0, None, 0))
+        self._vm = jax.jit(self._vm_raw)
+        self._fused_chunk = None            # built lazily by run_fused
+        self._sizes_f32 = jnp.asarray(fed.client_sizes, jnp.float32)
+        self.eval_graph = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed,
+                                           backend=eval_backend)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -245,11 +289,14 @@ class FedEngine:
         else:
             state.params = agg.aggregate(new_params_stack, weights, staleness)
 
-        # A client can be merged twice in one buffer (re-selected while its
-        # previous update was still in flight): every update aggregates, but
-        # the client-state write-back keeps only the freshest entry (``sel``
-        # arrives sorted by dispatch version, so the last occurrence wins).
-        if len(np.unique(sel)) != len(sel):
+        # Only an async buffer can merge the same client twice (re-selected
+        # while its previous update was still in flight): every update
+        # aggregates, but the client-state write-back keeps only the freshest
+        # entry (``sel`` arrives sorted by dispatch version, so the last
+        # occurrence wins). Sync cohorts are sampled without replacement and
+        # never duplicated, so they skip the host np.unique + fancy-index
+        # round-trip entirely (``staleness is None`` marks the sync path).
+        if staleness is not None and len(np.unique(sel)) != len(sel):
             _, last_rev = np.unique(np.asarray(sel)[::-1], return_index=True)
             w = np.sort(len(sel) - 1 - last_rev)
             sel_j = jnp.asarray(np.asarray(sel)[w])
@@ -282,6 +329,138 @@ class FedEngine:
         sel = self.selector.select(self, state)
         out = self.dispatch(state, sel, t)
         return self.merge(state, t, sel, out)
+
+    # ------------------------------------------------------------------
+    # fused executor (the SyncScheduler hot path)
+    # ------------------------------------------------------------------
+
+    def fused_eligibility(self) -> tuple[bool, str]:
+        """Can this engine run the fused scanned executor bit-identically?
+
+        Every component must declare itself safe for deferred host
+        observation: the selector precomputes a whole chunk's cohorts from
+        the host RNG alone, the aggregator traces inside jit, the strategy
+        has no per-round host hooks, the cost model prices rounds purely
+        from streamed stats, and the callbacks are the exact default-stack
+        types (side-effect-free on non-eval rounds). Returns (ok, reason).
+        """
+        from repro.api.strategies import MethodStrategy
+
+        scls = type(self.strategy)
+        fusable = getattr(self.strategy, "fusable", None)
+        if fusable is None:
+            fusable = (scls.pre_round is MethodStrategy.pre_round
+                       and scls.post_round is MethodStrategy.post_round)
+        if not fusable:
+            return False, f"strategy {scls.__name__} has per-round host hooks"
+        if not getattr(self.selector, "precomputable", False):
+            return False, (f"selector {type(self.selector).__name__} reads "
+                           "per-round state (not precomputable)")
+        if not getattr(self.aggregator, "jit_safe", False):
+            return False, (f"aggregator {type(self.aggregator).__name__} "
+                           "is not jit-traceable (jit_safe)")
+        if not getattr(self.cost_model, "fused_safe",
+                       isinstance(self.cost_model, PaperCostModel)):
+            return False, (f"cost model {type(self.cost_model).__name__} "
+                           "not declared fused_safe")
+        for cb in self.callbacks:
+            if not getattr(cb, "fused_safe",
+                           type(cb) in _FUSED_SAFE_CALLBACKS):
+                return False, (f"callback {type(cb).__name__} may observe "
+                               "per-round state (not fused_safe)")
+        return True, ""
+
+    def _build_fused_chunk(self):
+        """One jitted chunk: scan the traced round_step over S rounds with
+        the big mutable buffers donated (updated in place, never copied)."""
+        vm, agg, sizes = self._vm_raw, self.aggregator, self._sizes_f32
+
+        def chunk(params, hist1, age, ghost_feat, prev_loss, key,
+                  arrays, sel_stack, fan_stack, eoffs, tau):
+            m = sel_stack.shape[1]
+
+            def round_step(carry, xs):
+                params, hist1, age, ghost_feat, prev_loss, key = carry
+                sel, fanouts, eoff = xs
+                ks = jax.random.split(key, m + 1)       # same chain as dispatch
+                key, keys = ks[0], ks[1:]
+                client = {k: v[sel] for k, v in arrays.items()}
+                out = vm(params, client, arrays["features"], hist1,
+                         hist1[sel], age[sel], ghost_feat[sel], prev_loss[sel],
+                         tau, fanouts, eoff, keys)
+                new_params, new_hist1, new_age, new_ghost_feat, stats = out
+                params = agg.aggregate(new_params, sizes[sel])
+                hist1 = hist1.at[sel].set(new_hist1)
+                age = age.at[sel].set(new_age)
+                ghost_feat = ghost_feat.at[sel].set(new_ghost_feat)
+                prev_loss = prev_loss.at[sel].set(stats["loss_all"])
+                light = {k: stats[k] for k in _LIGHT_STATS}
+                return (params, hist1, age, ghost_feat, prev_loss, key), light
+
+            return jax.lax.scan(round_step,
+                                (params, hist1, age, ghost_feat, prev_loss, key),
+                                (sel_stack, fan_stack, eoffs))
+
+        return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4, 5))
+
+    def _run_chunk(self, state: EngineState, t0: int, n_rounds: int) -> bool:
+        """Select cohorts for rounds [t0, t0+n_rounds) on the host, run them
+        as ONE donated scanned XLA call, then replay the host tail (cost
+        accounting, post_round, callbacks) per round from the streamed
+        stats. Returns True if a callback requested stop."""
+        sels, fans = [], []
+        for t in range(t0, t0 + n_rounds):
+            state.round = t
+            sel = np.asarray(self.selector.select(self, state))
+            sels.append(sel)
+            fans.append(self.strategy.choose_fanouts(self, sel))
+        if any(len(s) != len(sels[0]) for s in sels):
+            raise ValueError(
+                "fused executor needs constant cohort sizes across a chunk; "
+                "precomputable selectors must return fixed-size cohorts")
+        if self._fused_chunk is None:
+            self._fused_chunk = self._build_fused_chunk()
+
+        eoffs = np.arange(t0, t0 + n_rounds, dtype=np.int32) * self.mcfg.local_epochs
+        carry, light = self._fused_chunk(
+            state.params, state.hist.hist1, state.hist.age, state.ghost_feat,
+            state.prev_loss, state.key, state.arrays,
+            jnp.asarray(np.stack(sels)), jnp.stack(fans), jnp.asarray(eoffs),
+            jnp.asarray(state.tau, jnp.int32))
+        (state.params, hist1, age, state.ghost_feat, state.prev_loss,
+         state.key) = carry
+        state.hist = state.hist._replace(hist1=hist1, age=age)
+
+        light = jax.device_get(light)       # one host transfer per chunk
+        for i, t in enumerate(range(t0, t0 + n_rounds)):
+            state.round = t
+            stats_t = {k: v[i] for k, v in light.items()}
+            state.result.costs.add(
+                self.cost_model.round_cost(self, state, sels[i], stats_t))
+            self.strategy.post_round(self, state, sels[i], stats_t)
+            ctx = RoundContext(engine=self, state=state, t=t, rounds=self.rounds)
+            for cb in self.callbacks:
+                cb.on_round_end(ctx)
+            if ctx.stop:
+                return True
+        return False
+
+    def run_fused(self, state: EngineState) -> None:
+        """Run all rounds through the scanned executor, chunked at eval
+        boundaries so the EvalCallback cadence (server eval + tau update +
+        early stop) observes exactly the rounds the stepwise loop would."""
+        eval_every = next((cb.eval_every for cb in self.callbacks
+                           if isinstance(cb, EvalCallback)), None)
+        t = 0
+        while t < self.rounds:
+            if eval_every is None:          # no eval: one chunk for the run
+                t_end = self.rounds - 1
+            else:                           # chunk ends at the next eval round
+                nxt = t if t % eval_every == 0 else (t // eval_every + 1) * eval_every
+                t_end = min(nxt, self.rounds - 1)
+            if self._run_chunk(state, t, t_end - t + 1):
+                return
+            t = t_end + 1
 
     def run(self, state: EngineState | None = None) -> RunResult:
         if state is None:

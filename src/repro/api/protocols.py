@@ -47,12 +47,24 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 @runtime_checkable
 class ClientSelector(Protocol):
     def select(self, engine: "FedEngine", state: "EngineState") -> np.ndarray:
-        """Return the ids of the clients participating this round."""
+        """Return the ids of the clients participating this round.
+
+        Contract: ids must be sampled WITHOUT replacement — the synchronous
+        merge write-back scatters by client id and skips duplicate handling
+        (only async buffers, which can legitimately hold two updates from
+        one client, pay for the dedup). Selectors whose draws depend only
+        on the host RNG + static data may set ``precomputable = True`` to
+        unlock the fused executor (whole-chunk cohorts drawn up front).
+        """
         ...
 
 
 class UniformSelector:
     """Uniform without replacement — the paper's (and legacy loop's) choice."""
+
+    # depends only on the host RNG stream + static geometry, so a whole
+    # chunk of cohorts can be drawn up front by the fused executor
+    precomputable = True
 
     def select(self, engine, state):
         return select_clients(state.rng, engine.fed.n_clients,
@@ -63,6 +75,8 @@ class SizeBiasedSelector:
     """Sample clients with probability proportional to local dataset size.
     Empty clients (a skewed Dirichlet partition can produce them) are never
     selected; the round shrinks if fewer non-empty clients exist than m."""
+
+    precomputable = True    # client sizes are static; only the RNG advances
 
     def select(self, engine, state):
         sizes = engine.fed.client_sizes.astype(np.float64)
@@ -75,6 +89,8 @@ class SizeBiasedSelector:
 class LossBiasedSelector:
     """Prefer clients whose last-seen mean local loss is highest (never-seen
     clients rank first) — the round-level analogue of Eq. 7's node scores."""
+
+    precomputable = False   # reads state.prev_loss, which changes every round
 
     def select(self, engine, state):
         pl = np.asarray(state.prev_loss)
@@ -109,6 +125,7 @@ class FedAvg:
     """Unweighted mean over the selected clients — Algorithm 1 line 7."""
 
     uses_weights = False
+    jit_safe = True     # pure jnp: traceable inside the fused round_step
 
     def aggregate(self, stacked_params, weights=None):
         return fedavg(stacked_params)
@@ -119,6 +136,7 @@ class WeightedFedAvg:
     ``fed.client_sizes[sel]`` as the weights."""
 
     uses_weights = True
+    jit_safe = True
 
     def aggregate(self, stacked_params, weights=None):
         if weights is None:
@@ -161,6 +179,7 @@ class StalenessWeightedAggregator:
     a: float = 0.5
 
     uses_weights = True
+    jit_safe = False    # host numpy discounts; async merges are eager anyway
 
     def aggregate(self, stacked_params, weights=None, staleness=None):
         if staleness is None:
@@ -255,6 +274,10 @@ class PaperCostModel:
 
     delay: DelayModel = field(default_factory=DelayModel)
 
+    # prices a round purely from the streamed stats + state.tau, so the
+    # fused executor can replay cost accounting at the chunk boundary
+    fused_safe = True
+
     # ---- vectorized per-client pieces (shared by the synchronous meter and
     # the async virtual clock) ----
 
@@ -318,12 +341,32 @@ class RoundScheduler(Protocol):
         ...
 
 
+@dataclass
 class SyncScheduler:
     """The paper's lockstep loop: every round dispatches a fresh cohort and
-    blocks until all of it merges. Reproduces the legacy ``run_federated``
-    round loop bit-for-bit."""
+    blocks until all of it merges. History-identical to the legacy
+    ``run_federated`` round loop bit-for-bit — through either executor.
+
+    ``fused`` selects the executor: ``None`` (default) auto-detects — the
+    scanned donated-buffer executor (``FedEngine.run_fused``) whenever every
+    component is fusable (see ``FedEngine.fused_eligibility``), else the
+    per-round stepwise loop; ``True`` forces fused (raising with the reason
+    if ineligible); ``False`` forces stepwise.
+    """
+
+    fused: Optional[bool] = None
 
     def run(self, engine, state):
+        fused = self.fused
+        if fused is None:
+            fused, _ = engine.fused_eligibility()
+        elif fused:
+            ok, why = engine.fused_eligibility()
+            if not ok:
+                raise ValueError(f"fused executor unavailable: {why}")
+        if fused:
+            engine.run_fused(state)
+            return
         for t in range(engine.rounds):
             if engine.run_round(state, t):
                 break

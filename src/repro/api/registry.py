@@ -125,7 +125,9 @@ def build_scheduler(name: str, **kwargs) -> RoundScheduler:
     return _SCHEDULERS[name](**kwargs)
 
 
-register_scheduler("sync", SyncScheduler)
+register_scheduler("sync", SyncScheduler)               # auto: fused if eligible
+register_scheduler("sync_fused", lambda **kw: SyncScheduler(fused=True, **kw))
+register_scheduler("sync_stepwise", lambda **kw: SyncScheduler(fused=False, **kw))
 register_scheduler("async", AsyncScheduler)
 
 

@@ -20,7 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.historical import pull_ghosts, push_embeddings
-from repro.core.importance import importance_probs, loss_delta_scores, sample_batch, uniform_probs
+from repro.core.importance import (
+    importance_probs,
+    loss_delta_scores,
+    sample_batch,
+    stable_rank,
+    uniform_probs,
+)
 from repro.models.gcn import gcn_batch_forward, per_node_loss
 from repro.optim import adamw_init, adamw_update
 
@@ -104,7 +110,14 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
             b_nbr_mask = client["nbr_mask"][batch_idx]
             ranks = jax.random.uniform(k_nbr, b_nbr_mask.shape)
             ranks = jnp.where(b_nbr_mask > 0, ranks, 2.0)
-            order = jnp.argsort(ranks, axis=-1).argsort(axis=-1)   # rank of each slot
+            # one stable top-k over mantissa-quantized keys (see
+            # importance.stable_rank) instead of the old double argsort over
+            # raw keys. NOTE: quantization coarsens the keys, so near-equal
+            # draws can tie and resolve by slot index where the raw-key path
+            # ordered them by value — seeded trajectories differ from the
+            # pre-quantization code (deliberate: same jitter-insensitivity
+            # scheme as sample_batch; tests pin new-vs-old on shared keys)
+            order = stable_rank(ranks)
             keep = (order < fanout).astype(jnp.float32)
             if not mcfg.use_ghosts:
                 keep = keep * (client["nbr_idx"][batch_idx] < n_max)

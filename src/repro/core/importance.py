@@ -49,6 +49,26 @@ def quantize_key(x: jnp.ndarray, drop_bits: int = QUANTIZE_DROP_BITS) -> jnp.nda
     return jax.lax.bitcast_convert_type(u & keep, jnp.float32)
 
 
+def stable_rank(keys: jnp.ndarray) -> jnp.ndarray:
+    """Ascending stable rank of every last-axis slot in ONE top-k pass.
+
+    ``stable_rank(x)[..., i]`` is the position slot ``i`` takes when the
+    mantissa-quantized keys sort ascending with ties resolved to the lower
+    index — the same ordering ``argsort(q).argsort()`` produces, but via a
+    single stable ``lax.top_k`` plus an inverse-permutation scatter instead
+    of two full sorts. Quantization (the ``sample_batch`` scheme) makes the
+    ranking insensitive to last-ULP FP jitter in the key producer.
+    """
+    q = quantize_key(keys)
+    k = keys.shape[-1]
+    # top_k of -q lists slots in ascending-q order; stable, so equal keys
+    # resolve to the lower slot index — exactly argsort's tie rule
+    _, idx = jax.lax.top_k(-q, k)
+    ranks = jnp.broadcast_to(jnp.arange(k, dtype=idx.dtype), idx.shape)
+    return jnp.put_along_axis(jnp.zeros_like(idx), idx, ranks, axis=-1,
+                              inplace=False)
+
+
 def sample_batch(key, probs: jnp.ndarray, batch_size: int, mask: jnp.ndarray):
     """Sample ``batch_size`` distinct node indices with P(v) ∝ probs.
 

@@ -2,12 +2,14 @@
 the adaptive-tau update (Algorithm 1 lines 1-8)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sync import adaptive_tau
-from repro.models.gcn import gcn_full_forward, per_node_loss
+from repro.models.gcn import AGG_BACKENDS, gcn_full_forward, per_node_loss
 
 
 def select_clients(rng: np.random.Generator, n_clients: int, m: int) -> np.ndarray:
@@ -33,10 +35,27 @@ def fedavg_weighted(stacked_params, weights: jnp.ndarray):
 # evaluation (server holds the test set — paper §Experimental Settings)
 # ---------------------------------------------------------------------------
 
-def build_eval_graph(graph, max_deg: int = 32, seed: int = 0) -> dict:
-    from repro.graph.csr import build_padded_neighbors
+def build_eval_graph(graph, max_deg: int = 32, seed: int = 0,
+                     backend: str = "gather") -> dict:
+    """``backend`` picks the full-forward neighbor aggregation (see
+    models.gcn.neighbor_aggregate); ``segment``/``spmm`` precompute their
+    static aggregation operands here (CSR edge arrays / the row-normalised
+    adjacency) so every per-round eval and layer reuses them."""
+    from repro.graph.csr import build_padded_neighbors, csr_from_padded
 
+    if backend not in AGG_BACKENDS:
+        raise ValueError(f"unknown eval backend {backend!r}; known: {AGG_BACKENDS}")
     idx, mask = build_padded_neighbors(graph.adjacency_lists(), max_deg, seed=seed)
+    csr = None
+    adj = None
+    if backend == "segment":
+        c = csr_from_padded(idx, mask)
+        csr = {k: jnp.asarray(v) for k, v in c.items()}
+    elif backend == "spmm":
+        from repro.kernels.spmm.ops import adjacency_from_neighbors
+
+        adj = adjacency_from_neighbors(jnp.asarray(idx), jnp.asarray(mask),
+                                       graph.n_nodes)
     return {
         "features": jnp.asarray(graph.features),
         "labels": jnp.asarray(graph.labels),
@@ -45,17 +64,25 @@ def build_eval_graph(graph, max_deg: int = 32, seed: int = 0) -> dict:
         "test_mask": jnp.asarray(graph.test_mask),
         "val_mask": jnp.asarray(graph.val_mask),
         "n_classes": graph.n_classes,
+        "backend": backend,
+        "csr": csr,
+        "adj": adj,
     }
 
 
-@jax.jit
-def _eval_logits(params, features, nbr_idx, nbr_mask):
-    return gcn_full_forward(params, features, nbr_idx, nbr_mask)
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _eval_logits(params, features, nbr_idx, nbr_mask, csr=None, adj=None,
+                 backend: str = "gather"):
+    return gcn_full_forward(params, features, nbr_idx, nbr_mask,
+                            backend=backend, csr=csr, adj=adj)
 
 
 def evaluate_global(params, eval_graph: dict, split: str = "test") -> dict:
     logits = _eval_logits(params, eval_graph["features"],
-                          eval_graph["nbr_idx"], eval_graph["nbr_mask"])
+                          eval_graph["nbr_idx"], eval_graph["nbr_mask"],
+                          csr=eval_graph.get("csr"),
+                          adj=eval_graph.get("adj"),
+                          backend=eval_graph.get("backend", "gather"))
     mask = np.asarray(eval_graph[f"{split}_mask"])
     labels = np.asarray(eval_graph["labels"])[mask]
     lg = np.asarray(logits, np.float32)[mask]

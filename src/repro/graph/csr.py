@@ -37,6 +37,28 @@ def build_padded_neighbors(
     return idx, mask
 
 
+def csr_from_padded(nbr_idx: np.ndarray, nbr_mask: np.ndarray) -> dict:
+    """Flatten a padded (n, K) neighbor list into CSR-style edge arrays.
+
+    Returns ``{"src": (E,) int32, "dst": (E,) int32, "inv_deg": (n,) float32}``
+    holding only the E real edges (mask > 0), ordered row-major (dst
+    non-decreasing, slots in list order). This is the ``segment_sum``
+    aggregation form: a mean-aggregate becomes
+    ``segment_sum(table[src], dst, n) * inv_deg[:, None]`` — no padded
+    ``(n, K, d)`` gather is ever materialized, and E excludes every padding
+    slot the dense form pays for.
+    """
+    idx = np.asarray(nbr_idx)
+    real = np.asarray(nbr_mask) > 0
+    dst, slot = np.nonzero(real)
+    deg = real.sum(-1)
+    return {
+        "src": idx[dst, slot].astype(np.int32),
+        "dst": dst.astype(np.int32),
+        "inv_deg": (1.0 / np.maximum(deg, 1)).astype(np.float32),
+    }
+
+
 def degree_stats(mask: np.ndarray) -> dict:
     deg = mask.sum(-1)
     return {

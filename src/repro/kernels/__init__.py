@@ -11,8 +11,26 @@ Kernels:
     flash_attention causal/sliding-window GQA attention, online softmax
     wkv6            RWKV6 linear recurrence, state resident in VMEM
 
-Kernels are validated in ``interpret=True`` mode on CPU; on-device they
-compile for TPU. The LM/GCN default paths use XLA einsum implementations —
-kernels are opt-in via ``use_pallas`` flags (CPU dry-runs must not trace
-pallas_call bodies for 512 fake devices).
+Every public wrapper takes ``interpret=None`` meaning auto-detect: compiled
+on TPU, interpreter elsewhere (see ``resolve_interpret``). Callers that
+never pass the flag therefore get the compiled kernel on device instead of
+silently running interpret-mode. The LM/GCN default paths use XLA einsum
+implementations — kernels are opt-in via ``use_pallas`` flags (CPU dry-runs
+must not trace pallas_call bodies for 512 fake devices).
 """
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument.
+
+    ``None`` (the default everywhere) auto-detects: run the compiled Pallas
+    kernel on TPU, fall back to the interpreter on every other backend (CPU
+    tests/CI, GPU). An explicit bool always wins — tests force
+    ``interpret=True`` and on-device debugging can force ``False``.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -1,4 +1,7 @@
-"""Public wrapper: (B, S, H, hd) layout, padding, GQA head mapping."""
+"""Public wrapper: (B, S, H, hd) layout, padding, GQA head mapping.
+
+``interpret=None`` auto-detects (compiled on TPU, interpreter elsewhere).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,6 +9,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 
 
@@ -21,8 +25,9 @@ def flash_attention(
     window: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    interpret = resolve_interpret(interpret)
     B, S, H, hd = q.shape
     Hkv = k.shape[2]
     bq = min(block_q, max(8, S))

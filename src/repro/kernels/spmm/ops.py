@@ -5,6 +5,8 @@ fly (inside jit — a cheap max-reduce per tile), runs the Pallas kernel and
 slices the padding off. ``neighbor_mean`` expresses the paper's padded
 neighbor-list aggregation as an SpMM against a normalised adjacency built
 from (idx, mask) — the form the FedGCN layer uses.
+
+``interpret=None`` auto-detects (compiled on TPU, interpreter elsewhere).
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.spmm.spmm import spmm_pallas
 
 
@@ -32,9 +35,10 @@ def block_spmm(
     block_n: int = 128,
     block_m: int = 128,
     block_d: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Y = A @ X via the block-skipping Pallas kernel. a (N, M), x (M, D)."""
+    interpret = resolve_interpret(interpret)
     N, D = a.shape[0], x.shape[1]
     ap = _pad_to(a, block_n, block_m)
     xp = _pad_to(x, block_m, block_d)
@@ -59,7 +63,8 @@ def adjacency_from_neighbors(nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, m: int
 
 
 def neighbor_mean(
-    features: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, *, interpret: bool = True
+    features: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, *,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Mean-aggregate neighbor features via the SpMM kernel."""
     a = adjacency_from_neighbors(nbr_idx, nbr_mask, features.shape[0])

@@ -1,4 +1,7 @@
-"""Public wrapper: (B, T, H, N) layout -> per-head rows, padding, reshape."""
+"""Public wrapper: (B, T, H, N) layout -> per-head rows, padding, reshape.
+
+``interpret=None`` auto-detects (compiled on TPU, interpreter elsewhere).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,16 +9,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.wkv6.wkv6 import wkv6_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
     """r,k,v,w: (B, T, H, N); u: (H, N). Returns (y (B,T,H,N), S (B,H,N,N)).
 
     Pads T to a chunk multiple with w=1, k=0 (identity steps) so the final
     state matches the unpadded recurrence.
     """
+    interpret = resolve_interpret(interpret)
     B, T, H, N = r.shape
     ct = min(chunk, max(8, T))
     pad = (-T) % ct

@@ -31,11 +31,59 @@ def gcn_init(key, n_features: int, n_classes: int, hidden=HIDDEN, dtype=jnp.floa
     return params
 
 
+AGG_BACKENDS = ("gather", "segment", "spmm")
+
+
 def _aggregate(table: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray) -> jnp.ndarray:
     """Mean-aggregate neighbor rows. table (M, d); nbr_idx/mask (b, K)."""
     gathered = table[nbr_idx] * nbr_mask[..., None]
     deg = jnp.maximum(nbr_mask.sum(-1, keepdims=True), 1.0)
     return gathered.sum(1) / deg
+
+
+def neighbor_aggregate(
+    table: jnp.ndarray,
+    nbr_idx: jnp.ndarray,
+    nbr_mask: jnp.ndarray,
+    *,
+    backend: str = "gather",
+    csr: dict | None = None,
+    adj: jnp.ndarray | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Mean-aggregate neighbor rows through a pluggable backend.
+
+    ``gather``   the dense (b, K, d) gather — current semantics and the
+                 bit-parity default (the training batch path uses it
+                 unconditionally: its batch shapes are dynamic).
+    ``segment``  CSR ``segment_sum`` over the E real edges — needs the
+                 precomputed ``csr`` dict from ``graph.csr.csr_from_padded``;
+                 never materializes the padded (b, K, d) gather.
+    ``spmm``     the block-sparse Pallas kernel (kernels/spmm) against a
+                 row-normalised adjacency; ``interpret`` auto-detects
+                 (compiled on TPU, interpreter elsewhere). The adjacency
+                 depends only on the static neighbor list — pass the
+                 precomputed ``adj`` (build_eval_graph does) so it is built
+                 once per graph, not per layer per call.
+
+    ``segment``/``spmm`` are numerically equivalent to ``gather`` within FP
+    tolerance (different summation order), pinned by tests/test_fused.py.
+    """
+    if backend == "gather":
+        return _aggregate(table, nbr_idx, nbr_mask)
+    if backend == "segment":
+        if csr is None:
+            raise ValueError("segment backend needs csr=csr_from_padded(...)")
+        seg = jax.ops.segment_sum(table[csr["src"]], csr["dst"],
+                                  num_segments=nbr_idx.shape[0])
+        return seg * csr["inv_deg"][:, None]
+    if backend == "spmm":
+        from repro.kernels.spmm.ops import adjacency_from_neighbors, block_spmm
+
+        if adj is None:
+            adj = adjacency_from_neighbors(nbr_idx, nbr_mask, table.shape[0])
+        return block_spmm(adj, table, interpret=interpret).astype(table.dtype)
+    raise ValueError(f"unknown aggregation backend {backend!r}; known: {AGG_BACKENDS}")
 
 
 def _sage_layer(params: dict, l: int, h_self: jnp.ndarray, h_agg: jnp.ndarray) -> jnp.ndarray:
@@ -74,11 +122,19 @@ def gcn_batch_forward(
     return logits, h1, h2
 
 
-def gcn_full_forward(params, features, nbr_idx, nbr_mask):
-    """Exact full-graph forward (server-side evaluation; no history)."""
+def gcn_full_forward(params, features, nbr_idx, nbr_mask, *,
+                     backend: str = "gather", csr: dict | None = None,
+                     adj: jnp.ndarray | None = None,
+                     interpret: bool | None = None):
+    """Exact full-graph forward (server-side evaluation; no history).
+
+    This is the per-round O(N·K·F) eval hot spot; ``backend`` selects the
+    neighbor-aggregation implementation (see ``neighbor_aggregate``).
+    """
     h = features
     for l in range(len(HIDDEN)):
-        agg = _aggregate(h, nbr_idx, nbr_mask)
+        agg = neighbor_aggregate(h, nbr_idx, nbr_mask, backend=backend,
+                                 csr=csr, adj=adj, interpret=interpret)
         h = _sage_layer(params, l, h, agg)
     return h @ params["w_cls"] + params["b_cls"]
 
