@@ -6,7 +6,6 @@ against cumulative bytes and the bytes needed to first reach the target.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.api import FedEngine, method_config
 from benchmarks.common import fed_setup

@@ -7,7 +7,6 @@ reduction from importance sampling vs uniform.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.importance import importance_probs, sampling_variance, uniform_probs
 from repro.core.variance import embedding_error, theorem1_bound

@@ -29,6 +29,14 @@ Two executors share that compiled client step:
   tests/test_fused.py. ``SyncScheduler`` auto-selects it whenever every
   component declares itself fusable (see ``FedEngine.fused_eligibility``).
 
+When a device ``mesh`` is configured, the fused chunk additionally shards
+its vmapped client axis across the mesh's ``("clients",)`` axis
+(``repro.sharding.fed.build_sharded_chunk``): each device trains its slice
+of the cohort, aggregation lowers to a weighted all-reduce, ragged cohorts
+pad with zero-weight dummy clients, and history stays allclose to the
+unsharded fused run (see ``FedEngine.sharded_eligibility`` and
+tests/test_sharding.py; fp32 all-reduce reassociation forfeits bit-parity).
+
 ``repro.federated.simulator.run_federated`` is a thin compatibility shim
 over ``FedEngine(...).run()`` and is proven history-identical to the legacy
 monolith by tests/test_api.py.
@@ -61,13 +69,19 @@ from repro.api.registry import (
     build_strategy,
     method_config,
 )
-from repro.core.fedais import MethodConfig, batch_size_for, make_local_update
+from repro.core.fedais import MethodConfig, batch_size_for, make_vmapped_update
 from repro.core.historical import init_historical
 from repro.federated.costs import CostMeter, DelayModel
 from repro.federated.partition import FederatedGraph
 from repro.federated.server import build_eval_graph, evaluate_global
 from repro.graph.data import GraphData
 from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_init, gcn_param_count
+from repro.sharding.fed import (
+    build_sharded_chunk,
+    client_axis_of,
+    cohort_padding,
+    replicate_to_mesh,
+)
 
 _CLIENT_ARRAY_KEYS = (
     "features", "labels", "node_mask", "train_mask",
@@ -163,6 +177,8 @@ class FedEngine:
         scheduler=None,
         callbacks: Optional[Sequence] = None,
         eval_backend: str = "gather",
+        mesh=None,
+        client_sharding: str = "auto",
     ):
         self.graph, self.fed = graph, fed
         self.mcfg = method_config(method) if isinstance(method, str) else method
@@ -206,21 +222,38 @@ class FedEngine:
                     "EarlyStopCallback to your list instead")
             self.callbacks = list(callbacks)
 
+        # ---- client-axis sharding (the fused executor's scale-out knob) ----
+        if client_sharding not in ("auto", "divisible", "off"):
+            raise ValueError(
+                f"unknown client_sharding {client_sharding!r}; known: "
+                "auto (pad ragged cohorts) | divisible (shard only when the "
+                "cohort splits evenly) | off")
+        self.mesh = mesh
+        self.client_sharding = client_sharding
+        self.client_axis = None
+        if mesh is not None:
+            self.client_axis = client_axis_of(mesh)
+            if self.client_axis is None:
+                raise ValueError(
+                    "client sharding needs a mesh with a 'clients' axis (or "
+                    f"a single axis); got axes {tuple(mesh.shape)}")
+        self.last_executor: Optional[str] = None   # "stepwise"|"fused"|"sharded_fused"
+
         # ---- static geometry + compiled LocalUpdate ----
         self.F, self.H1 = fed.n_features, HIDDEN[0]
         self.n_params = gcn_param_count(self.F, fed.n_classes)
         avg_deg = float(fed.nbr_mask.sum() / np.maximum(fed.node_mask.sum(), 1))
         self.fwd_flops_node = gcn_flops_per_node(self.F, fed.n_classes, avg_deg)
         self.bsz = batch_size_for(self.mcfg, fed.n_max)
-        local_update = make_local_update(self.mcfg, fed.n_max, fed.g_max, self.H1)
-        # the raw vmapped step is shared by both executors: the stepwise path
+        # the raw vmapped step is shared by every executor: the stepwise path
         # jits it standalone, the fused path traces it inside the scanned
-        # round_step (same computation, one compilation each)
-        self._vm_raw = jax.vmap(
-            local_update,
-            in_axes=(None, 0, None, None, 0, 0, 0, 0, None, 0, None, 0))
+        # round_step, the sharded path shard_maps it (same computation, one
+        # compilation each)
+        self._vm_raw = make_vmapped_update(self.mcfg, fed.n_max, fed.g_max, self.H1)
         self._vm = jax.jit(self._vm_raw)
         self._fused_chunk = None            # built lazily by run_fused
+        self._sharded_chunk = None          # built lazily when mesh is set
+        self._sharded_chunk_m = None        # cohort size it was traced for
         self._sizes_f32 = jnp.asarray(fed.client_sizes, jnp.float32)
         self.eval_graph = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed,
                                            backend=eval_backend)
@@ -325,6 +358,7 @@ class FedEngine:
 
     def run_round(self, state: EngineState, t: int) -> bool:
         """One lockstep federated round; True if a callback requested stop."""
+        self.last_executor = "stepwise"
         state.round = t
         sel = self.selector.select(self, state)
         out = self.dispatch(state, sel, t)
@@ -370,6 +404,41 @@ class FedEngine:
                                "per-round state (not fused_safe)")
         return True, ""
 
+    def sharded_eligibility(self, m: int | None = None) -> tuple[bool, str]:
+        """Can the fused chunk shard its client axis over ``self.mesh``?
+
+        Refines ``fused_eligibility`` (which must already hold — the
+        sharded executor is a variant of the fused one, never of the
+        stepwise loop): server aggregation must lower to a weighted
+        all-reduce inside the shard-mapped round body (``allreduce_safe``
+        mean-family aggregators), and with ``client_sharding="divisible"``
+        the cohort ``m`` must split evenly across the mesh axis instead of
+        being padded. Ineligible configs fall back to the unsharded fused
+        chunk (and from there to stepwise, per ``fused_eligibility``).
+        """
+        if self.mesh is None:
+            return False, "no mesh configured"
+        if self.client_sharding == "off":
+            return False, "client_sharding='off'"
+        # The sharded merge never calls aggregator.aggregate — it lowers to
+        # the hardcoded weighted psum mean — so the flag must be vouched by
+        # the class that PROVIDES aggregate: a subclass overriding aggregate
+        # without re-declaring allreduce_safe must not inherit eligibility
+        # (its override would be silently replaced by the mean).
+        provider = next((c for c in type(self.aggregator).__mro__
+                         if "aggregate" in c.__dict__), None)
+        if provider is None or not provider.__dict__.get("allreduce_safe", False):
+            return False, (f"aggregator {type(self.aggregator).__name__} does "
+                           "not declare its aggregate() a weighted-mean "
+                           "family (allreduce_safe) rule")
+        if m is not None and self.client_sharding == "divisible":
+            shards = self.mesh.shape[self.client_axis]
+            if m % shards:
+                return False, (f"cohort size {m} does not divide mesh axis "
+                               f"size {shards} (client_sharding='divisible' "
+                               "disables padding)")
+        return True, ""
+
     def _build_fused_chunk(self):
         """One jitted chunk: scan the traced round_step over S rounds with
         the big mutable buffers donated (updated in place, never copied)."""
@@ -403,6 +472,44 @@ class FedEngine:
 
         return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4, 5))
 
+    def _call_sharded_chunk(self, state: EngineState, sels, fans, eoffs):
+        """Run one chunk through the shard-mapped executor
+        (repro.sharding.fed.build_sharded_chunk): pad ragged cohorts with
+        zero-weight dummy clients, derive per-client aggregation weights
+        from the aggregator's semantics (client sizes for WeightedFedAvg,
+        uniform for FedAvg), and hand the donated buffers — committed to
+        the mesh fully replicated — to the scanned sharded round_step."""
+        mesh, axis = self.mesh, self.client_axis
+        m = len(sels[0])
+        if self._sharded_chunk is None or self._sharded_chunk_m != m:
+            self._sharded_chunk = build_sharded_chunk(
+                self._vm_raw, mesh, axis, m, _LIGHT_STATS)
+            self._sharded_chunk_m = m
+        pad = cohort_padding(m, mesh.shape[axis])
+        sel_stack = np.stack(sels).astype(np.int32)
+        fan_stack = np.stack([np.asarray(f) for f in fans])
+        if getattr(self.aggregator, "uses_weights", False):
+            w_stack = self.fed.client_sizes[sel_stack].astype(np.float32)
+        else:
+            w_stack = np.ones(sel_stack.shape, np.float32)
+        if pad:
+            # out-of-range id: gathers clamp (dummy trains on real data,
+            # harmlessly), scatters drop (its write-back never lands);
+            # weight 0 keeps it out of the aggregation all-reduce
+            sel_stack = np.pad(sel_stack, ((0, 0), (0, pad)),
+                               constant_values=self.fed.n_clients)
+            fan_stack = np.pad(fan_stack, ((0, 0), (0, pad)), mode="edge")
+            w_stack = np.pad(w_stack, ((0, 0), (0, pad)))
+        (state.params, hist1, age, state.ghost_feat, state.prev_loss,
+         state.key, state.arrays) = replicate_to_mesh(
+            (state.params, state.hist.hist1, state.hist.age, state.ghost_feat,
+             state.prev_loss, state.key, state.arrays), mesh)
+        return self._sharded_chunk(
+            state.params, hist1, age, state.ghost_feat, state.prev_loss,
+            state.key, state.arrays, jnp.asarray(sel_stack),
+            jnp.asarray(fan_stack), jnp.asarray(w_stack), jnp.asarray(eoffs),
+            jnp.asarray(state.tau, jnp.int32))
+
     def _run_chunk(self, state: EngineState, t0: int, n_rounds: int) -> bool:
         """Select cohorts for rounds [t0, t0+n_rounds) on the host, run them
         as ONE donated scanned XLA call, then replay the host tail (cost
@@ -418,15 +525,20 @@ class FedEngine:
             raise ValueError(
                 "fused executor needs constant cohort sizes across a chunk; "
                 "precomputable selectors must return fixed-size cohorts")
-        if self._fused_chunk is None:
-            self._fused_chunk = self._build_fused_chunk()
-
         eoffs = np.arange(t0, t0 + n_rounds, dtype=np.int32) * self.mcfg.local_epochs
-        carry, light = self._fused_chunk(
-            state.params, state.hist.hist1, state.hist.age, state.ghost_feat,
-            state.prev_loss, state.key, state.arrays,
-            jnp.asarray(np.stack(sels)), jnp.stack(fans), jnp.asarray(eoffs),
-            jnp.asarray(state.tau, jnp.int32))
+
+        if self.mesh is not None and self.sharded_eligibility(len(sels[0]))[0]:
+            self.last_executor = "sharded_fused"
+            carry, light = self._call_sharded_chunk(state, sels, fans, eoffs)
+        else:
+            self.last_executor = "fused"
+            if self._fused_chunk is None:
+                self._fused_chunk = self._build_fused_chunk()
+            carry, light = self._fused_chunk(
+                state.params, state.hist.hist1, state.hist.age, state.ghost_feat,
+                state.prev_loss, state.key, state.arrays,
+                jnp.asarray(np.stack(sels)), jnp.stack(fans), jnp.asarray(eoffs),
+                jnp.asarray(state.tau, jnp.int32))
         (state.params, hist1, age, state.ghost_feat, state.prev_loss,
          state.key) = carry
         state.hist = state.hist._replace(hist1=hist1, age=age)

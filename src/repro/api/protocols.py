@@ -126,6 +126,10 @@ class FedAvg:
 
     uses_weights = False
     jit_safe = True     # pure jnp: traceable inside the fused round_step
+    # weighted-mean family: sum(w*x)/sum(w) with uniform w, so the sharded
+    # executor may lower this merge to a psum all-reduce across devices
+    # (allclose, not bit-identical — reassociated summation order)
+    allreduce_safe = True
 
     def aggregate(self, stacked_params, weights=None):
         return fedavg(stacked_params)
@@ -137,6 +141,7 @@ class WeightedFedAvg:
 
     uses_weights = True
     jit_safe = True
+    allreduce_safe = True   # sum(w*x)/sum(w): exactly a weighted all-reduce
 
     def aggregate(self, stacked_params, weights=None):
         if weights is None:
@@ -352,6 +357,13 @@ class SyncScheduler:
     component is fusable (see ``FedEngine.fused_eligibility``), else the
     per-round stepwise loop; ``True`` forces fused (raising with the reason
     if ineligible); ``False`` forces stepwise.
+
+    When the engine has a device ``mesh``, the fused executor additionally
+    shards each chunk's client axis across it — gated by the same
+    ``fused_eligibility`` plus ``FedEngine.sharded_eligibility`` (the
+    aggregator must be ``allreduce_safe``; ragged cohorts pad with
+    zero-weight dummies, or fall back under ``client_sharding="divisible"``).
+    Every gate fails soft: sharded -> fused -> stepwise.
     """
 
     fused: Optional[bool] = None

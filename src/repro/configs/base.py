@@ -15,7 +15,7 @@ Block kinds:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable
 
 import jax.numpy as jnp

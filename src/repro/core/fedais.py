@@ -58,6 +58,19 @@ def batch_size_for(mcfg: MethodConfig, n_max: int) -> int:
     return max(1, min(mcfg.batch_cap, int(round(n_max * mcfg.sample_ratio))))
 
 
+# vmap axes of local_update over the selected-client cohort: per-client
+# slices map on their leading axis; params / full tables / scalars broadcast
+VMAP_IN_AXES = (None, 0, None, None, 0, 0, 0, 0, None, 0, None, 0)
+
+
+def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
+    """The cohort-stacked LocalUpdate every executor vmaps over the selected
+    clients — shared by the engine's stepwise/fused paths and the sharded
+    round_step (repro.sharding.fed), so all of them run one computation."""
+    return jax.vmap(make_local_update(mcfg, n_max, g_max, h1_dim),
+                    in_axes=VMAP_IN_AXES)
+
+
 def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
     """Build the jit-able LocalUpdate for one client (Algorithm 1 lines 10-19)."""
     bsz = batch_size_for(mcfg, n_max)

@@ -9,7 +9,6 @@ empirical estimates; tests assert the empirical quantities respect them.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -6,7 +6,7 @@ deterministic — matching how the paper reports Fig. 3/4 cost axes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -1,14 +1,11 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
-
 """Multi-pod dry-run: prove every (architecture x input-shape x mesh)
 combination lowers, SPMD-partitions and compiles, and extract the roofline
 terms from the compiled artifact.
 
-The two lines above MUST stay first (before any jax import): jax locks the
-device count on first init, and the dry-run needs 512 placeholder host
-devices to build the production meshes. Do NOT set this flag anywhere else —
-smoke tests and benchmarks run on the single real CPU device.
+Run as a script this forces 512 placeholder host devices (jax locks the
+device count on first backend init, and the production meshes need 512
+chips) — see ``--force-devices``. Importing the module never touches
+``XLA_FLAGS``: smoke tests and benchmarks run on the single real CPU device.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh pod1
@@ -17,6 +14,7 @@ Usage:
 import argparse
 import dataclasses
 import json
+import os
 import time
 import traceback
 
@@ -308,8 +306,16 @@ def main():
     ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
     ap.add_argument("--attn-impl", default=None, choices=[None, "einsum", "chunked"])
     ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--force-devices", type=int, default=512,
+                    help="force N fake XLA host devices before the backend "
+                         "initializes (0 disables; the production meshes "
+                         "need 512)")
     ap.add_argument("--out", default=None, help="directory for JSON results")
     args = ap.parse_args()
+    if args.force_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.force_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
 
     archs = list_archs() if (args.all or args.arch is None) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]

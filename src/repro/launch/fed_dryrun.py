@@ -1,146 +1,144 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+"""Multi-pod dry-run of the PAPER'S OWN workload: one FedAIS round chunk
+(Algorithm 1) with the client cohort sharded across the production mesh.
 
-"""Multi-pod dry-run of the PAPER'S OWN workload: one FedAIS round
-(Algorithm 1) with K clients sharded across the production mesh.
-
-Each client's LocalUpdate is vmapped over a client axis that shards over the
-mesh ("data" x "model" = one client per chip on pod1), so the cross-client
-ghost pull inside LocalUpdate lowers to gather/all-to-all collectives across
-chips — exactly the embedding-synchronization network phase of the real
-deployment — and FedAvg lowers to an all-reduce. This is the FedGCN-scale
-companion to launch/dryrun.py's LM cases.
+This is now a thin caller of the engine's own sharded executor: it lowers
+``repro.sharding.fed.build_sharded_chunk`` — the exact scanned
+``round_step`` ``FedEngine`` runs when given a mesh — over abstract
+client-sharded arguments, so the dry-run and real training share one
+code path. The vmapped client axis shard_maps over a ``("clients",)``
+mesh axis: the cross-client ghost pull reads the replicated historical
+tables, FedAvg lowers to a weighted all-reduce (psum), and the
+historical/ghost write-back all-gathers the cohort's fresh embeddings —
+exactly the embedding-synchronization network phase of the real
+deployment. This is the FedGCN-scale companion to launch/dryrun.py's LM
+cases.
 
     PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh pod1
+
+Run as a script this forces fake XLA host devices (512 by default, so
+both pod chip counts fit on CPU); importing the module never touches
+``XLA_FLAGS`` — pass ``--force-devices N`` (0 disables) or use
+``--mesh host`` to run on whatever devices already exist.
 """
 import argparse
 import json
+import os
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api.engine import _LIGHT_STATS
 from repro.api.registry import method_config
-from repro.core.fedais import MethodConfig, make_local_update
-from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_label
-from repro.models.gcn import HIDDEN, gcn_init, gcn_param_count
+from repro.core.fedais import make_vmapped_update
+from repro.launch.mesh import production_chip_count
+from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_param_count
+from repro.sharding.fed import (
+    abstract_chunk_args,
+    build_sharded_chunk,
+    client_axis_of,
+    cohort_padding,
+    make_client_mesh,
+)
 from repro.utils.hlo import collective_stats
 from repro.utils.roofline import RooflineReport
 
+# chip counts come from the production mesh definition (launch/mesh.py)
+MESH_CHIPS = {
+    "pod1": production_chip_count(multi_pod=False),
+    "pod2": production_chip_count(multi_pod=True),
+}
 
-def build_round_step(mcfg: MethodConfig, K: int, n_max: int, g_max: int,
-                     n_feat: int, n_classes: int, mesh):
-    """Returns (round_step, abstract args with shardings)."""
-    H1 = HIDDEN[0]
-    local_update = make_local_update(mcfg, n_max, g_max, H1)
-    client_axes = tuple(mesh.shape.keys())  # clients shard over the whole mesh
 
-    def round_step(params, client, hist1, age, ghost_feat, prev_loss, tau, keys):
-        out = jax.vmap(
-            local_update,
-            in_axes=(None, 0, None, None, 0, 0, 0, 0, None, None, None, 0),
-        )(params, client, client["features"], hist1, hist1, age, ghost_feat,
-          prev_loss, tau, jnp.asarray(mcfg.neighbor_fanout, jnp.int32),
-          jnp.asarray(0, jnp.int32), keys)
-        new_params, new_hist1, new_age, new_ghost, stats = out
-        # FedAvg over every client (all-reduce across the mesh)
-        agg = jax.tree_util.tree_map(lambda x: x.mean(axis=0), new_params)
-        return agg, new_hist1, new_age, new_ghost, stats["loss_all"]
+def _force_host_devices(n: int) -> None:
+    """Fake XLA host devices; only effective before the backend initializes
+    (caller flags win for duplicates, preserving any prior forced count)."""
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n} "
+        + os.environ.get("XLA_FLAGS", ""))
 
-    def sds(shape, dtype, spec):
-        return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
 
-    c = P(client_axes)            # client-sharded leading axis
-    r = P()                       # replicated
-    n_tot = n_max + g_max
-    params = jax.eval_shape(lambda: gcn_init(jax.random.PRNGKey(0), n_feat, n_classes))
-    params = jax.tree_util.tree_map(
-        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=NamedSharding(mesh, r)),
-        params)
-    client = {
-        "features": sds((K, n_max, n_feat), jnp.float32, c),
-        "labels": sds((K, n_max), jnp.int32, c),
-        "node_mask": sds((K, n_max), jnp.float32, c),
-        "train_mask": sds((K, n_max), jnp.float32, c),
-        "nbr_idx": sds((K, n_max, 16), jnp.int32, c),
-        "nbr_mask": sds((K, n_max, 16), jnp.float32, c),
-        "ghost_owner": sds((K, g_max), jnp.int32, c),
-        "ghost_row": sds((K, g_max), jnp.int32, c),
-        "ghost_mask": sds((K, g_max), jnp.float32, c),
-    }
-    args = (
-        params,
-        client,
-        sds((K, n_tot, HIDDEN[0]), jnp.float32, c),   # hist1 (all clients)
-        sds((K, n_tot), jnp.int32, c),                # age
-        sds((K, g_max, n_feat), jnp.float32, c),      # ghost features
-        sds((K, n_max), jnp.float32, c),              # prev loss
-        jax.ShapeDtypeStruct((), jnp.int32),          # tau
-        sds((K, 2), jnp.uint32, c),                   # per-client PRNG keys
+def dryrun_mesh(mesh_name: str, args) -> dict:
+    """Lower one sharded round chunk on ``mesh_name``'s chip count and
+    report collectives + roofline. Returns the result row (status key
+    "ok"/"error")."""
+    chips = MESH_CHIPS.get(mesh_name, len(jax.devices()))
+    mesh = make_client_mesh(chips)
+    axis = client_axis_of(mesh)
+    K = args.clients or chips
+    pad = cohort_padding(K, chips)
+    mcfg = method_config("fedais", local_epochs=4, batch_cap=args.n_max)
+    vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0])
+    chunk = build_sharded_chunk(vm, mesh, axis, m_real=K,
+                                light_stats=_LIGHT_STATS)
+    sargs = abstract_chunk_args(
+        mesh, n_clients=K, cohort=K + pad, n_max=args.n_max,
+        g_max=args.g_max, n_feat=args.features, n_classes=args.classes)
+
+    t0 = time.time()
+    compiled = chunk.lower(*sargs).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    coll = collective_stats(compiled.as_text())
+
+    n_params = gcn_param_count(args.features, args.classes)
+    # per-round model flops: J epochs x batch fwd+bwd over K clients
+    flops_model = 3.0 * gcn_flops_per_node(args.features, args.classes, 8.0) \
+        * args.n_max * mcfg.local_epochs * K
+    rep = RooflineReport(
+        arch="fedgcn-graphsage", shape=f"K{K}", mesh=mesh_name, chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)) * chips,
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)) * chips,
+        collective_bytes=float(coll.total_bytes) * chips,
+        model_flops=flops_model,
     )
-    return round_step, args
+    result = {
+        "status": "ok", "arch": "fedgcn-graphsage", "shape": f"K{K}",
+        "mesh": mesh_name, "chips": chips, "clients": K, "cohort_pad": pad,
+        "gcn_params": n_params,
+        "compile_s": round(time.time() - t0, 1),
+        "collectives": {k: int(v) for k, v in coll.bytes_by_kind.items()},
+        "roofline": rep.row(),
+        "memory": {"temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
+    }
+    print(rep.pretty())
+    print(f"    [{mesh_name}] K={K} compile={result['compile_s']}s "
+          f"collectives: {coll.summary()}")
+    return result
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--mesh", default="pod1",
+                    choices=["pod1", "pod2", "both", "host"],
+                    help="pod chip counts, or 'host' = all existing devices")
     ap.add_argument("--clients", type=int, default=0, help="default: one per chip")
     ap.add_argument("--n-max", type=int, default=512)
     ap.add_argument("--g-max", type=int, default=256)
     ap.add_argument("--features", type=int, default=128)
     ap.add_argument("--classes", type=int, default=41)   # reddit-like
+    ap.add_argument("--force-devices", type=int, default=None,
+                    help="force N fake XLA host devices before the backend "
+                         "initializes (default: 512 for pod meshes, off for "
+                         "--mesh host; 0 disables)")
     ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    if args.force_devices is None and args.mesh != "host":
+        args.force_devices = max(MESH_CHIPS.values())
+    if args.force_devices:
+        _force_host_devices(args.force_devices)
 
     meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
     rc = 0
     for mesh_name in meshes:
-        mesh = make_production_mesh(multi_pod=mesh_name == "pod2")
-        chips = mesh_chips(mesh)
-        K = args.clients or chips
-        mcfg = method_config("fedais", local_epochs=4, batch_cap=args.n_max)
-        step, sargs = build_round_step(mcfg, K, args.n_max, args.g_max,
-                                       args.features, args.classes, mesh)
-        t0 = time.time()
         try:
-            with mesh:
-                lowered = jax.jit(step).lower(*sargs)
-                compiled = lowered.compile()
-                cost = compiled.cost_analysis()
-                if isinstance(cost, (list, tuple)):
-                    cost = cost[0] if cost else {}
-                mem = compiled.memory_analysis()
-                hlo = compiled.as_text()
+            result = dryrun_mesh(mesh_name, args)
         except Exception as e:
             print(f"[{mesh_name}] ERROR: {type(e).__name__}: {e}")
             rc = 1
             continue
-        coll = collective_stats(hlo)
-        n_params = gcn_param_count(args.features, args.classes)
-        # per-round model flops: J epochs x batch fwd+bwd over K clients
-        from repro.models.gcn import gcn_flops_per_node
-        flops_model = 3.0 * gcn_flops_per_node(args.features, args.classes, 8.0) \
-            * args.n_max * mcfg.local_epochs * K
-        rep = RooflineReport(
-            arch="fedgcn-graphsage", shape=f"K{K}", mesh=mesh_name, chips=chips,
-            hlo_flops=float(cost.get("flops", 0.0)) * chips,
-            hlo_bytes=float(cost.get("bytes accessed", 0.0)) * chips,
-            collective_bytes=float(coll.total_bytes) * chips,
-            model_flops=flops_model,
-        )
-        result = {
-            "status": "ok", "arch": "fedgcn-graphsage", "shape": f"K{K}",
-            "mesh": mesh_name, "chips": chips, "clients": K,
-            "gcn_params": n_params,
-            "compile_s": round(time.time() - t0, 1),
-            "collectives": {k: int(v) for k, v in coll.bytes_by_kind.items()},
-            "roofline": rep.row(),
-            "memory": {"temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
-        }
-        print(rep.pretty())
-        print(f"    [{mesh_name}] K={K} compile={result['compile_s']}s "
-              f"collectives: {coll.summary()}")
         if args.out:
             os.makedirs(args.out, exist_ok=True)
             with open(os.path.join(args.out, f"fedgcn_{mesh_name}.json"), "w") as f:

@@ -5,9 +5,20 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def production_mesh_shape(*, multi_pod: bool = False) -> tuple:
     """TPU v5e: 16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    return (2, 16, 16) if multi_pod else (16, 16)
+
+
+def production_chip_count(*, multi_pod: bool = False) -> int:
+    n = 1
+    for v in production_mesh_shape(multi_pod=multi_pod):
+        n *= v
+    return n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = production_mesh_shape(multi_pod=multi_pod)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

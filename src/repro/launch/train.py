@@ -16,7 +16,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import math
 import time
 
 import jax

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, groupnorm, mlp_apply, rmsnorm, rmsnorm_init, shard_activation
+from repro.models.layers import dense_init, groupnorm, rmsnorm, rmsnorm_init, shard_activation
 
 LORA_MIX = 32     # rank of the ddlerp lora
 LORA_DECAY = 64   # rank of the decay lora

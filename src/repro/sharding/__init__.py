@@ -1,3 +1,10 @@
+from repro.sharding.fed import (
+    CLIENT_AXIS,
+    build_sharded_chunk,
+    client_axis_of,
+    cohort_padding,
+    make_client_mesh,
+)
 from repro.sharding.specs import (
     activation_rules,
     batch_spec,
@@ -5,4 +12,14 @@ from repro.sharding.specs import (
     param_spec_tree,
 )
 
-__all__ = ["activation_rules", "batch_spec", "decode_state_spec", "param_spec_tree"]
+__all__ = [
+    "CLIENT_AXIS",
+    "activation_rules",
+    "batch_spec",
+    "build_sharded_chunk",
+    "client_axis_of",
+    "cohort_padding",
+    "decode_state_spec",
+    "make_client_mesh",
+    "param_spec_tree",
+]

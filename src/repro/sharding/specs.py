@@ -17,7 +17,6 @@ we shard feature dims, not head counts (DESIGN.md §6.5).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # trailing-dims rule per leaf name. "F" = fsdp axis ("data" in train mode,

@@ -8,10 +8,8 @@ import pytest
 from repro.api import (
     AsyncScheduler,
     BaseCallback,
-    EvalCallback,
     FedAvg,
     FedEngine,
-    HistoryCallback,
     PaperCostModel,
     RoundScheduler,
     StalenessWeightedAggregator,

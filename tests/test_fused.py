@@ -53,6 +53,7 @@ def _assert_bit_parity(step, fused):
 # fused vs stepwise history bit-parity
 # ---------------------------------------------------------------------------
 
+@pytest.mark.sharded       # the CI multi-device lane re-runs this under 8 devices
 def test_fused_matches_stepwise_fedais(small_fed):
     """Fast lane: multi-round chunks (eval_every=2) scan bit-identically."""
     g, fed = small_fed

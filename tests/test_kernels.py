@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True) +
 hypothesis property sweeps over shapes/dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

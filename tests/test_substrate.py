@@ -1,17 +1,15 @@
 """Substrate tests: optimizer, checkpointing, data pipeline, utils, sharding."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypcompat import given, settings, st  # hypothesis, or a skip-stub when absent
+from hypcompat import st  # hypothesis strategies, or a skip-stub when absent
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.data.pipeline import TokenPipeline, make_lm_batch
 from repro.optim import adamw_init, adamw_update, sgd_update
 from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
-from repro.utils.hlo import collective_stats, count_op
+from repro.utils.hlo import collective_stats
 from repro.utils.roofline import RooflineReport
 from repro.utils.tree import (
     global_norm_clip,
