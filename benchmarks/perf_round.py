@@ -35,6 +35,73 @@ from benchmarks.common import emit_csv, fed_setup, save_rows
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# BENCH_round.json schema: the perf-smoke gate and the forward-merge logic
+# (plain runs carry the sharded column, sharded-only runs keep the gated
+# rows) both rewrite the file, so malformed payloads would otherwise
+# propagate silently until a CI failure nobody can diagnose.
+_TOP_KEYS = ("bench", "backend", "devices", "quick", "fused_speedup",
+             "sharded_rounds_per_s", "sharded_devices", "rows")
+_GATED_VARIANTS = ("stepwise", "fused")
+
+
+def validate_bench_round(payload, *, require_gated: bool = True) -> list[str]:
+    """Schema-check a BENCH_round.json payload. Returns a list of problems
+    (empty = valid): required keys present and typed, every row labelled
+    with a variant, the gated single-device rows not silently nulled or
+    dropped, and the sharded column's value/device-count consistent.
+    ``require_gated=False`` permits a payload without the stepwise/fused
+    rows — only legitimate for a fresh ``--sharded-only`` run with no
+    previous BENCH_round.json to merge the gated rows from."""
+    errs: list[str] = []
+    if not isinstance(payload, dict):
+        return [f"payload is {type(payload).__name__}, expected dict"]
+    for k in _TOP_KEYS:
+        if k not in payload:
+            errs.append(f"missing key {k!r}")
+    if errs:
+        return errs
+    if payload["bench"] != "round_throughput":
+        errs.append(f"bench is {payload['bench']!r}, "
+                    "expected 'round_throughput'")
+    if not isinstance(payload["devices"], int) or payload["devices"] < 1:
+        errs.append(f"devices must be a positive int, got {payload['devices']!r}")
+    if not isinstance(payload["quick"], bool):
+        errs.append(f"quick must be a bool, got {payload['quick']!r}")
+    rows = payload["rows"]
+    if not isinstance(rows, list) or not rows:
+        return errs + ["rows must be a non-empty list"]
+    by_variant: dict = {}
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or not isinstance(row.get("variant"), str):
+            errs.append(f"rows[{i}] has no string 'variant'")
+            continue
+        by_variant[row["variant"]] = row
+    # the gated payload: stepwise + fused rows with real throughput numbers
+    # and a non-null speedup — a merge that nulls any of these broke the gate
+    for v in _GATED_VARIANTS:
+        row = by_variant.get(v)
+        if row is None:
+            if require_gated:
+                errs.append(f"gated row {v!r} missing")
+        elif not isinstance(row.get("rounds_per_s"), (int, float)) \
+                or not row["rounds_per_s"] > 0:
+            errs.append(f"gated row {v!r} has no positive rounds_per_s "
+                        f"(got {row.get('rounds_per_s')!r})")
+    if all(v in by_variant for v in _GATED_VARIANTS):
+        sp = payload["fused_speedup"]
+        if not isinstance(sp, (int, float)) or not sp > 0:
+            errs.append("fused_speedup nulled while gated rows exist "
+                        f"(got {sp!r})")
+    srps, sdev = payload["sharded_rounds_per_s"], payload["sharded_devices"]
+    if srps is not None and (not isinstance(srps, (int, float)) or not srps > 0):
+        errs.append(f"sharded_rounds_per_s must be None or positive, got {srps!r}")
+    if (srps is None) != (sdev is None):
+        errs.append("sharded_rounds_per_s and sharded_devices must be "
+                    f"nulled together (got {srps!r} / {sdev!r})")
+    if sdev is not None and (not isinstance(sdev, int) or sdev < 1):
+        errs.append(f"sharded_devices must be None or a positive int, got {sdev!r}")
+    return errs
+
 
 def _time_run(make_engine, repeats: int = 3) -> float:
     """Median wall-clock of a full engine.run() after compile warmups."""
@@ -161,10 +228,13 @@ def run(quick: bool = True, sharded: bool = False,
         pass
     if sharded_rps is None and prev is not None:
         # a non-sharded run must not erase the recorded sharded column —
-        # carry the previous measurement (and its device count, so the
-        # provenance stays readable) forward instead of nulling it
+        # carry the previous measurement forward (scalar, device count, AND
+        # its sharded_fused row, so the ms_per_round/device provenance
+        # travels with the number) instead of nulling it
         sharded_rps = prev.get("sharded_rounds_per_s")
         sharded_devices = prev.get("sharded_devices")
+        rows += [r for r in prev.get("rows", [])
+                 if isinstance(r, dict) and r.get("variant") == "sharded_fused"]
     if sharded_only and prev is not None:
         # merge: update only the sharded column + row, keep the gated
         # single-device payload (fused_speedup, stepwise/fused/eval rows)
@@ -185,6 +255,18 @@ def run(quick: bool = True, sharded: bool = False,
             "sharded_devices": sharded_devices,
             "rows": rows,
         }
+    # gated rows are demanded whenever this run produced them (any plain
+    # run) or the previous payload carried them (a merge must not drop
+    # them) — but not for sharded-only runs stacked on a gate-less file
+    prev_gated = prev is not None and any(
+        isinstance(r, dict) and r.get("variant") in _GATED_VARIANTS
+        for r in prev.get("rows", []))
+    problems = validate_bench_round(
+        payload, require_gated=not sharded_only or prev_gated)
+    if problems:
+        raise ValueError(
+            "refusing to write a malformed BENCH_round.json:\n  "
+            + "\n  ".join(problems))
     with open(bench_path, "w") as f:
         json.dump(payload, f, indent=1)
     return rows

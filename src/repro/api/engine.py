@@ -37,6 +37,18 @@ pad with zero-weight dummy clients, and history stays allclose to the
 unsharded fused run (see ``FedEngine.sharded_eligibility`` and
 tests/test_sharding.py; fp32 all-reduce reassociation forfeits bit-parity).
 
+On a 2-D ``("pods", "clients")`` mesh with ``table_sharding`` allowing it,
+the historical tables themselves shard their K axis over the pod axis
+(``repro.sharding.tables.build_pod_sharded_chunk``): each pod owns its
+resident clients' hist1/age/ghost_feat/prev_loss rows, the cross-client
+ghost pull becomes a partition-time-bucketed ``all_to_all`` keyed by
+``ghost_owner``, and the write-back shrinks to a cohort all-gather plus
+pod-local scatter — per-device table memory and sync traffic stop scaling
+with K (see ``FedEngine.pod_sharded_eligibility``, the soft fallback chain
+pod-sharded -> client-sharded -> fused -> stepwise, and
+tests/test_pod_sharding.py). ``merge_reduce="pairwise"`` swaps the merge's
+psum for a deterministic fp32 binary-tree over gathered partial sums.
+
 ``repro.federated.simulator.run_federated`` is a thin compatibility shim
 over ``FedEngine(...).run()`` and is proven history-identical to the legacy
 monolith by tests/test_api.py.
@@ -72,7 +84,7 @@ from repro.api.registry import (
 from repro.core.fedais import MethodConfig, batch_size_for, make_vmapped_update
 from repro.core.historical import init_historical
 from repro.federated.costs import CostMeter, DelayModel
-from repro.federated.partition import FederatedGraph
+from repro.federated.partition import FederatedGraph, ghost_exchange_buckets
 from repro.federated.server import build_eval_graph, evaluate_global
 from repro.graph.data import GraphData
 from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_init, gcn_param_count
@@ -81,6 +93,12 @@ from repro.sharding.fed import (
     client_axis_of,
     cohort_padding,
     replicate_to_mesh,
+)
+from repro.sharding.tables import (
+    build_pod_sharded_chunk,
+    pad_tables_to_pods,
+    pod_axes_of,
+    shard_tables_to_mesh,
 )
 
 _CLIENT_ARRAY_KEYS = (
@@ -142,6 +160,10 @@ class EngineState:
     initial_loss: Optional[float] = None
     round: int = 0
     last_eval: Optional[tuple] = None  # (round, metrics) from EvalCallback
+    # per-update staleness of the merge being post-processed (None on the
+    # sync paths, where merge order == dispatch order by construction);
+    # strategies read it to attribute async rewards to dispatch versions
+    last_staleness: Optional[np.ndarray] = None
 
 
 def _client_slice(arrays: dict, ids: np.ndarray) -> dict:
@@ -179,6 +201,8 @@ class FedEngine:
         eval_backend: str = "gather",
         mesh=None,
         client_sharding: str = "auto",
+        table_sharding: str = "auto",
+        merge_reduce: str = "psum",
     ):
         self.graph, self.fed = graph, fed
         self.mcfg = method_config(method) if isinstance(method, str) else method
@@ -228,16 +252,35 @@ class FedEngine:
                 f"unknown client_sharding {client_sharding!r}; known: "
                 "auto (pad ragged cohorts) | divisible (shard only when the "
                 "cohort splits evenly) | off")
+        if table_sharding not in ("auto", "pods", "replicated"):
+            raise ValueError(
+                f"unknown table_sharding {table_sharding!r}; known: "
+                "auto (pod-shard when the mesh has a 'pods' axis) | pods | "
+                "replicated")
+        if merge_reduce not in ("psum", "pairwise"):
+            raise ValueError(
+                f"unknown merge_reduce {merge_reduce!r}; known: psum "
+                "(weighted all-reduce) | pairwise (fp32 fixed-tree over "
+                "gathered partials)")
         self.mesh = mesh
         self.client_sharding = client_sharding
+        self.table_sharding = table_sharding
+        self.merge_reduce = merge_reduce
         self.client_axis = None
+        self.pod_axes = None
         if mesh is not None:
+            self.pod_axes = pod_axes_of(mesh)
             self.client_axis = client_axis_of(mesh)
-            if self.client_axis is None:
+            if self.client_axis is None and self.pod_axes is None:
                 raise ValueError(
                     "client sharding needs a mesh with a 'clients' axis (or "
                     f"a single axis); got axes {tuple(mesh.shape)}")
-        self.last_executor: Optional[str] = None   # "stepwise"|"fused"|"sharded_fused"
+        if table_sharding == "pods" and self.pod_axes is None:
+            raise ValueError(
+                "table_sharding='pods' needs a mesh with ('pods', 'clients') "
+                f"axes; got {None if mesh is None else tuple(mesh.shape)}")
+        # "stepwise"|"fused"|"sharded_fused"|"pod_sharded"
+        self.last_executor: Optional[str] = None
 
         # ---- static geometry + compiled LocalUpdate ----
         self.F, self.H1 = fed.n_features, HIDDEN[0]
@@ -254,6 +297,9 @@ class FedEngine:
         self._fused_chunk = None            # built lazily by run_fused
         self._sharded_chunk = None          # built lazily when mesh is set
         self._sharded_chunk_m = None        # cohort size it was traced for
+        self._pod_chunk = None              # built lazily in pod-table mode
+        self._pod_chunk_m = None
+        self._ghost_buckets = None          # partition-time all-to-all plan
         self._sizes_f32 = jnp.asarray(fed.client_sizes, jnp.float32)
         self.eval_graph = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed,
                                            backend=eval_backend)
@@ -348,7 +394,11 @@ class FedEngine:
         if wall_clock_s is not None:
             cost.wall_clock_s = wall_clock_s    # overlapped (virtual-clock) billing
         state.result.costs.add(cost)
-        self.strategy.post_round(self, state, sel, stats)
+        state.last_staleness = staleness
+        try:
+            self.strategy.post_round(self, state, sel, stats)
+        finally:
+            state.last_staleness = None
 
         ctx = RoundContext(engine=self, state=state, t=t, rounds=self.rounds,
                            virtual_time=virtual_time, staleness=staleness)
@@ -420,23 +470,66 @@ class FedEngine:
             return False, "no mesh configured"
         if self.client_sharding == "off":
             return False, "client_sharding='off'"
-        # The sharded merge never calls aggregator.aggregate — it lowers to
-        # the hardcoded weighted psum mean — so the flag must be vouched by
-        # the class that PROVIDES aggregate: a subclass overriding aggregate
-        # without re-declaring allreduce_safe must not inherit eligibility
-        # (its override would be silently replaced by the mean).
-        provider = next((c for c in type(self.aggregator).__mro__
-                         if "aggregate" in c.__dict__), None)
-        if provider is None or not provider.__dict__.get("allreduce_safe", False):
-            return False, (f"aggregator {type(self.aggregator).__name__} does "
-                           "not declare its aggregate() a weighted-mean "
-                           "family (allreduce_safe) rule")
+        if self.client_axis is None:
+            return False, ("mesh has no 'clients' (or single) axis to shard "
+                           "the cohort over")
+        why = self._allreduce_unsafe_reason()
+        if why:
+            return False, why
         if m is not None and self.client_sharding == "divisible":
             shards = self.mesh.shape[self.client_axis]
             if m % shards:
                 return False, (f"cohort size {m} does not divide mesh axis "
                                f"size {shards} (client_sharding='divisible' "
                                "disables padding)")
+        return True, ""
+
+    def _allreduce_unsafe_reason(self) -> str:
+        """Why the aggregator cannot lower to the sharded executors' merge
+        (empty string when it can). The sharded merges never call
+        aggregator.aggregate — they lower to the hardcoded weighted psum /
+        pairwise mean — so the flag must be vouched by the class that
+        PROVIDES aggregate: a subclass overriding aggregate without
+        re-declaring allreduce_safe must not inherit eligibility (its
+        override would be silently replaced by the mean)."""
+        provider = next((c for c in type(self.aggregator).__mro__
+                         if "aggregate" in c.__dict__), None)
+        if provider is None or not provider.__dict__.get("allreduce_safe", False):
+            return (f"aggregator {type(self.aggregator).__name__} does "
+                    "not declare its aggregate() a weighted-mean "
+                    "family (allreduce_safe) rule")
+        return ""
+
+    def pod_sharded_eligibility(self, m: int | None = None) -> tuple[bool, str]:
+        """Can the fused chunk run with pod-sharded historical tables?
+
+        Refines ``sharded_eligibility`` for the ``("pods", "clients")``
+        2-D mesh mode (repro.sharding.tables): the mesh must carry both
+        axes, ``table_sharding`` must allow it, and — like the
+        client-sharded executor — the aggregator must be an
+        ``allreduce_safe`` weighted-mean family. Cohorts pad over the FULL
+        device count (pods x clients); ``client_sharding="divisible"``
+        demands divisibility instead. Ineligible configs fall soft down
+        the chain: pod-sharded -> client-sharded -> fused -> stepwise.
+        """
+        if self.mesh is None:
+            return False, "no mesh configured"
+        if self.pod_axes is None:
+            return False, ("mesh has no ('pods', 'clients') axes "
+                           f"(got {tuple(self.mesh.shape)})")
+        if self.table_sharding == "replicated":
+            return False, "table_sharding='replicated'"
+        if self.client_sharding == "off":
+            return False, "client_sharding='off'"
+        why = self._allreduce_unsafe_reason()
+        if why:
+            return False, why
+        if m is not None and self.client_sharding == "divisible":
+            shards = self.mesh.devices.size
+            if m % shards:
+                return False, (f"cohort size {m} does not divide the mesh's "
+                               f"{shards} devices (client_sharding="
+                               "'divisible' disables padding)")
         return True, ""
 
     def _build_fused_chunk(self):
@@ -488,10 +581,7 @@ class FedEngine:
         pad = cohort_padding(m, mesh.shape[axis])
         sel_stack = np.stack(sels).astype(np.int32)
         fan_stack = np.stack([np.asarray(f) for f in fans])
-        if getattr(self.aggregator, "uses_weights", False):
-            w_stack = self.fed.client_sizes[sel_stack].astype(np.float32)
-        else:
-            w_stack = np.ones(sel_stack.shape, np.float32)
+        w_stack = self._cohort_weights(sel_stack)
         if pad:
             # out-of-range id: gathers clamp (dummy trains on real data,
             # harmlessly), scatters drop (its write-back never lands);
@@ -510,6 +600,70 @@ class FedEngine:
             jnp.asarray(fan_stack), jnp.asarray(w_stack), jnp.asarray(eoffs),
             jnp.asarray(state.tau, jnp.int32))
 
+    def _cohort_weights(self, sel_stack: np.ndarray) -> np.ndarray:
+        """Per-client aggregation weights for the sharded merges: client
+        sizes when the aggregator folds them in (WeightedFedAvg), uniform
+        otherwise (FedAvg)."""
+        if getattr(self.aggregator, "uses_weights", False):
+            return self.fed.client_sizes[sel_stack].astype(np.float32)
+        return np.ones(sel_stack.shape, np.float32)
+
+    def _call_pod_chunk(self, state: EngineState, sels, fans, eoffs):
+        """Run one chunk with the historical tables sharded over the pod
+        axis (repro.sharding.tables.build_pod_sharded_chunk): pad the K
+        axis to the pod grid, commit the four tables as pod shards and
+        everything else replicated, pad ragged cohorts with dummy clients
+        whose id is out of range of even the PADDED tables (fetches zero,
+        write-backs drop), and slice the tables back to K rows after."""
+        mesh = self.mesh
+        n_pods = mesh.shape[self.pod_axes[0]]
+        n_dev = mesh.devices.size
+        if self._ghost_buckets is None or self._ghost_buckets.n_pods != n_pods:
+            self._ghost_buckets = ghost_exchange_buckets(
+                self.fed.ghost_owner, self.fed.ghost_row,
+                self.fed.ghost_mask, n_pods)
+        buckets = self._ghost_buckets
+        m = len(sels[0])
+        if self._pod_chunk is None or self._pod_chunk_m != m:
+            vm = make_vmapped_update(self.mcfg, self.fed.n_max,
+                                     self.fed.g_max, self.H1,
+                                     ghost_source="prefetched")
+            self._pod_chunk = build_pod_sharded_chunk(
+                vm, mesh, m, buckets, _LIGHT_STATS,
+                reduce=self.merge_reduce)
+            self._pod_chunk_m = m
+        pad = cohort_padding(m, n_dev)
+        sel_stack = np.stack(sels).astype(np.int32)
+        fan_stack = np.stack([np.asarray(f) for f in fans])
+        w_stack = self._cohort_weights(sel_stack)
+        if pad:
+            sel_stack = np.pad(sel_stack, ((0, 0), (0, pad)),
+                               constant_values=buckets.n_clients_padded)
+            fan_stack = np.pad(fan_stack, ((0, 0), (0, pad)), mode="edge")
+            w_stack = np.pad(w_stack, ((0, 0), (0, pad)))
+        K = self.fed.n_clients
+        tables = pad_tables_to_pods(
+            (state.hist.hist1, state.hist.age, state.ghost_feat,
+             state.prev_loss), n_pods)
+        hist1, age, ghost_feat, prev_loss = shard_tables_to_mesh(tables, mesh)
+        state.params, state.key, state.arrays = replicate_to_mesh(
+            (state.params, state.key, state.arrays), mesh)
+        carry, light = self._pod_chunk(
+            state.params, hist1, age, ghost_feat, prev_loss, state.key,
+            state.arrays, jnp.asarray(sel_stack), jnp.asarray(fan_stack),
+            jnp.asarray(w_stack), jnp.asarray(eoffs),
+            jnp.asarray(state.tau, jnp.int32))
+        if buckets.n_clients_padded == K:
+            # divisible K: the carried tables come back pod-sharded and feed
+            # the next chunk's (no-op) pad + device_put directly — shards
+            # stay resident on their pods across chunk boundaries
+            return carry, light
+        (params, hist1, age, ghost_feat, prev_loss, key) = carry
+        # ragged K: drop the pod-padding rows again; state keeps the K-row
+        # view every host-side consumer (selectors, eval, fallback) expects
+        return ((params, hist1[:K], age[:K], ghost_feat[:K], prev_loss[:K],
+                 key), light)
+
     def _run_chunk(self, state: EngineState, t0: int, n_rounds: int) -> bool:
         """Select cohorts for rounds [t0, t0+n_rounds) on the host, run them
         as ONE donated scanned XLA call, then replay the host tail (cost
@@ -527,7 +681,10 @@ class FedEngine:
                 "precomputable selectors must return fixed-size cohorts")
         eoffs = np.arange(t0, t0 + n_rounds, dtype=np.int32) * self.mcfg.local_epochs
 
-        if self.mesh is not None and self.sharded_eligibility(len(sels[0]))[0]:
+        if self.mesh is not None and self.pod_sharded_eligibility(len(sels[0]))[0]:
+            self.last_executor = "pod_sharded"
+            carry, light = self._call_pod_chunk(state, sels, fans, eoffs)
+        elif self.mesh is not None and self.sharded_eligibility(len(sels[0]))[0]:
             self.last_executor = "sharded_fused"
             carry, light = self._call_sharded_chunk(state, sels, fans, eoffs)
         else:

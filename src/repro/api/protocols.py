@@ -363,7 +363,10 @@ class SyncScheduler:
     ``fused_eligibility`` plus ``FedEngine.sharded_eligibility`` (the
     aggregator must be ``allreduce_safe``; ragged cohorts pad with
     zero-weight dummies, or fall back under ``client_sharding="divisible"``).
-    Every gate fails soft: sharded -> fused -> stepwise.
+    On a 2-D ``("pods", "clients")`` mesh the historical tables themselves
+    shard over the pod axis first (``FedEngine.pod_sharded_eligibility``).
+    Every gate fails soft: pod-sharded -> client-sharded -> fused ->
+    stepwise.
     """
 
     fused: Optional[bool] = None

@@ -94,22 +94,47 @@ class GeneratorStrategy(MethodStrategy):
 
 class BanditStrategy(MethodStrategy):
     """FedGraph lite: per-client epsilon-greedy bandit over fanout actions,
-    rewarded by the round-over-round local-loss improvement."""
+    rewarded by the round-over-round local-loss improvement.
+
+    Reward attribution assumes a client's updates are observed in dispatch
+    order. Synchronous merges guarantee that (one update per client per
+    round). Async merges restack each buffer by (dispatch version, cohort
+    position), so a client selected twice while in flight rewards oldest ->
+    freshest within the merge — matching the engine write-back's
+    dedup-keeps-freshest rule — but a straggler can still arrive in a LATER
+    merge than a fresher update it departed before. Such out-of-order
+    arrivals are skipped: their "improvement" would be measured against a
+    loss the bandit already advanced past, inverting the reward's sign.
+    ``state.last_staleness`` carries the per-update staleness the async
+    merge observed (None on sync paths, where every update is this
+    round's and the skip can never fire — legacy rewards bit-for-bit).
+    """
 
     def setup(self, engine, state):
         self.bandit = B.FanoutBandit(engine.fed.n_clients, seed=engine.seed)
         self.last_client_loss = np.zeros(engine.fed.n_clients)
+        # dispatch version of each client's last rewarded update
+        self.last_reward_version = np.full(engine.fed.n_clients, -1, np.int64)
 
     def choose_fanouts(self, engine, sel):
         return jnp.asarray([self.bandit.choose(int(k)) for k in sel], jnp.int32)
 
     def post_round(self, engine, state, sel, stats):
         mean_losses = np.asarray(stats["epoch_losses"]).mean(axis=1)
+        staleness = state.last_staleness
+        if staleness is None:               # sync: every update is this round's
+            versions = np.full(len(sel), state.round, np.int64)
+        else:
+            versions = state.round - np.asarray(staleness, np.int64)
         for i, k in enumerate(sel):
+            v = int(versions[i])
+            if v < self.last_reward_version[k]:
+                continue    # stale straggler ordered after a fresher update
             reward = (self.last_client_loss[k] - float(mean_losses[i])
                       if self.last_client_loss[k] else 0.0)
             self.bandit.update(int(k), reward)
             self.last_client_loss[k] = float(mean_losses[i])
+            self.last_reward_version[k] = v
 
 
 # ---------------------------------------------------------------------------

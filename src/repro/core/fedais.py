@@ -19,7 +19,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.historical import pull_ghosts, push_embeddings
+from repro.core.historical import pull_ghosts, pull_ghosts_prefetched, push_embeddings
 from repro.core.importance import (
     importance_probs,
     loss_delta_scores,
@@ -61,25 +61,51 @@ def batch_size_for(mcfg: MethodConfig, n_max: int) -> int:
 # vmap axes of local_update over the selected-client cohort: per-client
 # slices map on their leading axis; params / full tables / scalars broadcast
 VMAP_IN_AXES = (None, 0, None, None, 0, 0, 0, 0, None, 0, None, 0)
+# ghost_source="prefetched": the two table-snapshot args become per-client
+# pre-gathered (g_max, F)/(g_max, H1) source rows and map on their leading axis
+VMAP_IN_AXES_PREFETCHED = (None, 0, 0, 0, 0, 0, 0, 0, None, 0, None, 0)
 
 
-def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
+def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
+                        *, ghost_source: str = "tables"):
     """The cohort-stacked LocalUpdate every executor vmaps over the selected
     clients — shared by the engine's stepwise/fused paths and the sharded
-    round_step (repro.sharding.fed), so all of them run one computation."""
-    return jax.vmap(make_local_update(mcfg, n_max, g_max, h1_dim),
-                    in_axes=VMAP_IN_AXES)
+    round_step (repro.sharding.fed), so all of them run one computation.
+    ``ghost_source="prefetched"`` builds the pod-sharded variant (see
+    ``make_local_update``)."""
+    axes = VMAP_IN_AXES if ghost_source == "tables" else VMAP_IN_AXES_PREFETCHED
+    return jax.vmap(make_local_update(mcfg, n_max, g_max, h1_dim,
+                                      ghost_source=ghost_source),
+                    in_axes=axes)
 
 
-def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
-    """Build the jit-able LocalUpdate for one client (Algorithm 1 lines 10-19)."""
+def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
+                      *, ghost_source: str = "tables"):
+    """Build the jit-able LocalUpdate for one client (Algorithm 1 lines 10-19).
+
+    ``ghost_source`` picks where the tau-gated embedding sync reads from:
+
+    * ``"tables"`` (default): gather from the replicated round-start
+      snapshots ``feats_all`` (K, n_max, F) / ``hist1_all`` (K, n_tot, H1).
+    * ``"prefetched"``: the same two positional arguments instead carry THIS
+      client's pre-gathered ghost-source rows — (g_max, F) owner features
+      and (g_max, H1) owner layer-1 rows, exchanged cross-pod by the
+      table-sharded executor before the cohort step. Same values (both are
+      round-start snapshots), so the two modes are computationally
+      identical per client.
+    """
+    if ghost_source not in ("tables", "prefetched"):
+        raise ValueError(f"unknown ghost_source {ghost_source!r}; "
+                         "known: tables | prefetched")
     bsz = batch_size_for(mcfg, n_max)
 
     def local_update(
         params: Any,                # global model from server
         client: dict,               # this client's stacked-slice arrays
         feats_all: jnp.ndarray,     # (K, n_max, F) — ghost pull source
+                                    #   [prefetched: (g_max, F) source rows]
         hist1_all: jnp.ndarray,     # (K, n_tot, H1) — ghost pull source (snapshot)
+                                    #   [prefetched: (g_max, H1) source rows]
         hist1: jnp.ndarray,         # (n_tot, H1) this client's table
         age: jnp.ndarray,           # (n_tot,)
         ghost_feat: jnp.ndarray,    # (g_max, F) current synced ghost features
@@ -155,9 +181,14 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int):
             need = need * client["ghost_mask"]
 
             def pull(_):
-                gf, gh = pull_ghosts(hist1_all, feats_all,
-                                     client["ghost_owner"], client["ghost_row"],
-                                     client["ghost_mask"])
+                if ghost_source == "tables":
+                    gf, gh = pull_ghosts(hist1_all, feats_all,
+                                         client["ghost_owner"],
+                                         client["ghost_row"],
+                                         client["ghost_mask"])
+                else:
+                    gf, gh = pull_ghosts_prefetched(feats_all, hist1_all,
+                                                    client["ghost_mask"])
                 new_ghost_feat = jnp.where(need[:, None] > 0, gf, ghost_feat)
                 new_hist = hist1.at[n_max:].set(
                     jnp.where(need[:, None] > 0, gh, hist1[n_max:]))

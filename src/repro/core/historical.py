@@ -57,6 +57,26 @@ def pull_ghosts(
     return gf, gh
 
 
+def pull_ghosts_prefetched(
+    ghost_src_feat: jnp.ndarray,   # (g_max, F) pre-gathered owner features
+    ghost_src_h1: jnp.ndarray,     # (g_max, H1) pre-exchanged owner h1 rows
+    ghost_mask: jnp.ndarray,       # (g_max,)
+):
+    """The pod-sharded twin of ``pull_ghosts``: when the (K, n_tot, H1)
+    tables shard over a pod mesh axis there is no replicated ``hist1_all``
+    to gather from, so the executor exchanges the owner rows up front (a
+    ``ghost_owner``-keyed bucketed all-to-all over the round-start table
+    snapshot — see ``federated.partition.ghost_exchange_buckets`` and
+    ``sharding.tables``) and hands each client its pre-gathered sources.
+    Same contract as ``pull_ghosts``: for slots with ``ghost_mask > 0`` the
+    returned rows equal ``feats_all[owner, row]`` / ``hist1_all[owner, row]``
+    exactly (the sources are a round-start snapshot either way), masked
+    slots are 0."""
+    gf = ghost_src_feat * ghost_mask[:, None]
+    gh = ghost_src_h1 * ghost_mask[:, None]
+    return gf, gh
+
+
 def staleness_metrics(age: jnp.ndarray, node_mask: jnp.ndarray) -> dict:
     m = node_mask > 0
     a = jnp.where(m, age, 0)

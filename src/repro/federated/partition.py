@@ -27,6 +27,144 @@ import numpy as np
 from repro.graph.data import GraphData
 
 
+def pod_table_padding(n_clients: int, n_pods: int) -> int:
+    """Dummy client rows appended so the K-sized historical tables split
+    evenly across ``n_pods`` pod shards (rows ``>= n_clients`` stay zero and
+    are never selected or referenced by ghost buckets)."""
+    return (-n_clients) % n_pods
+
+
+@dataclass
+class GhostBuckets:
+    """Partition-time routing plan for the cross-pod ghost exchange.
+
+    When the historical tables shard their client (K) axis over a pod mesh
+    axis, ``pull_ghosts`` can no longer gather from a replicated
+    ``hist1_all`` — each ghost's layer-1 source row lives only on the pod
+    that owns that client. The exchange becomes a bucketed all-to-all: pod
+    ``p`` sends, for every destination pod ``q``, the (deduplicated) table
+    rows that ``q``'s resident clients reference as ghosts; ``q``
+    reassembles its residents' (g_max,) ghost-source rows from the received
+    buckets. The buckets depend only on the partition's ghost topology
+    (``ghost_owner``/``ghost_row``/``ghost_mask``) and the pod count, so
+    they are built once here on the host and baked into the compiled chunk
+    as constants.
+
+    Shapes (P = n_pods, B = bucket_size, Kp = padded client count):
+        send_client (P, P, B)  row index within the SOURCE pod's table shard
+        send_row    (P, P, B)  row within the owner's (n_tot,) table (< n_max)
+        send_mask   (P, P, B)  1 for real entries, 0 for bucket padding
+        recv_src    (Kp, g_max) source pod of each resident ghost slot
+        recv_pos    (Kp, g_max) position within that pod's received bucket
+        recv_mask   (Kp, g_max) ghost_mask of real residents, 0 on padding
+
+    ``send_*[p, q]`` is what pod p sends to pod q; after the all-to-all,
+    pod q's receive buffer slot p holds exactly those rows, and
+    ``recv_*[k]`` (k resident on q) indexes into it.
+    """
+
+    n_pods: int
+    rows_per_pod: int       # padded K / n_pods
+    bucket_size: int        # B: max entries over all (src, dst) pod pairs
+    n_entries: int          # total real (deduplicated) bucket entries
+    send_client: np.ndarray
+    send_row: np.ndarray
+    send_mask: np.ndarray
+    recv_src: np.ndarray
+    recv_pos: np.ndarray
+    recv_mask: np.ndarray
+
+    @property
+    def n_clients_padded(self) -> int:
+        return self.n_pods * self.rows_per_pod
+
+
+def ghost_exchange_buckets(
+    ghost_owner: np.ndarray,    # (K, g_max) owning client id (-1 pad)
+    ghost_row: np.ndarray,      # (K, g_max) row within the owner's arrays
+    ghost_mask: np.ndarray,     # (K, g_max)
+    n_pods: int,
+) -> GhostBuckets:
+    """Build the per-pod send/recv index buckets for the ghost all-to-all.
+
+    Clients are block-assigned to pods by id: pod p owns rows
+    ``[p * rows_per_pod, (p + 1) * rows_per_pod)`` of the padded table.
+    Every (owner, row) source pair needed by some resident of pod q appears
+    exactly once in the owner pod's send bucket for q (duplicates across
+    residents of the same pod deduplicate; the same source row needed by
+    residents of DIFFERENT pods is sent once per destination).
+    """
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    K, g_max = ghost_owner.shape
+    pad = pod_table_padding(K, n_pods)
+    Kp = K + pad
+    rpp = Kp // n_pods
+
+    # (src, dst) -> {(owner, row): bucket position}; dicts keep insertion
+    # order, so bucket layout is deterministic for a given partition
+    buckets: list[list[dict]] = [[{} for _ in range(n_pods)]
+                                 for _ in range(n_pods)]
+    recv_src = np.zeros((Kp, g_max), np.int32)
+    recv_pos = np.zeros((Kp, g_max), np.int32)
+    recv_mask = np.zeros((Kp, g_max), np.float32)
+    for k in range(K):
+        q = k // rpp
+        for s in range(g_max):
+            if ghost_mask[k, s] <= 0:
+                continue
+            o, r = int(ghost_owner[k, s]), int(ghost_row[k, s])
+            p = o // rpp
+            d = buckets[p][q]
+            pos = d.setdefault((o, r), len(d))
+            recv_src[k, s] = p
+            recv_pos[k, s] = pos
+            recv_mask[k, s] = 1.0
+
+    n_entries = sum(len(d) for row in buckets for d in row)
+    B = max(1, max(len(d) for row in buckets for d in row))
+    send_client = np.zeros((n_pods, n_pods, B), np.int32)
+    send_row = np.zeros((n_pods, n_pods, B), np.int32)
+    send_mask = np.zeros((n_pods, n_pods, B), np.float32)
+    for p in range(n_pods):
+        for q in range(n_pods):
+            for (o, r), pos in buckets[p][q].items():
+                send_client[p, q, pos] = o - p * rpp
+                send_row[p, q, pos] = r
+                send_mask[p, q, pos] = 1.0
+    return GhostBuckets(
+        n_pods=n_pods, rows_per_pod=rpp, bucket_size=B, n_entries=n_entries,
+        send_client=send_client, send_row=send_row, send_mask=send_mask,
+        recv_src=recv_src, recv_pos=recv_pos, recv_mask=recv_mask,
+    )
+
+
+def simulate_ghost_exchange(buckets: GhostBuckets,
+                            hist1_all: np.ndarray) -> np.ndarray:
+    """Host-side (numpy) reference of the on-device exchange: build every
+    pod's send buffers from its table shard, swap them all-to-all, and
+    reassemble per-resident ghost-source rows. Returns (Kp, g_max, H1) —
+    row [k, s] is ``hist1_all[ghost_owner[k, s], ghost_row[k, s]]`` for
+    every real ghost slot and 0 elsewhere. The property tests pin this
+    against ``core.historical.pull_ghosts``; ``sharding.tables`` runs the
+    same dataflow with ``jax.lax.all_to_all``."""
+    P, B = buckets.n_pods, buckets.bucket_size
+    rpp, Kp = buckets.rows_per_pod, buckets.n_clients_padded
+    K, n_tot, H1 = hist1_all.shape
+    shards = np.zeros((P, rpp, n_tot, H1), hist1_all.dtype)
+    shards.reshape(Kp, n_tot, H1)[:K] = hist1_all
+    # send: sbuf[p, q] = the rows pod p sends to pod q
+    sbuf = (shards[np.arange(P)[:, None, None],
+                   buckets.send_client, buckets.send_row]
+            * buckets.send_mask[..., None])
+    # all-to-all: pod q's receive slot p holds what pod p addressed to q
+    rbuf = np.swapaxes(sbuf, 0, 1)          # rbuf[q, p] = sbuf[p, q]
+    pod = np.arange(Kp) // rpp
+    out = (rbuf[pod[:, None], buckets.recv_src, buckets.recv_pos]
+           * buckets.recv_mask[..., None])
+    return out
+
+
 @dataclass
 class FederatedGraph:
     """All K clients stacked on a leading axis (numpy; moved to jax later)."""

@@ -14,6 +14,15 @@ deployment. This is the FedGCN-scale companion to launch/dryrun.py's LM
 cases.
 
     PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh pod1
+    PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh pod1 --pods 16
+
+``--pods P`` lowers the pod-table mode instead (repro.sharding.tables): a
+``("pods", "clients")`` 2-D mesh whose table shards stay resident per pod,
+with the ghost exchange as a bucketed all-to-all — the report then carries
+a ``pods`` ledger (ghost-cut entries, all-to-all vs all-gather bytes, and
+the replicated-table byte count the sharding avoids). Sweep ``--clients``
+at a fixed ``--cohort`` to verify the write-back scales with the ghost
+cut, not with K.
 
 Run as a script this forces fake XLA host devices (512 by default, so
 both pod chip counts fit on CPU); importing the module never touches
@@ -26,10 +35,12 @@ import os
 import time
 
 import jax
+import numpy as np
 
 from repro.api.engine import _LIGHT_STATS
 from repro.api.registry import method_config
 from repro.core.fedais import make_vmapped_update
+from repro.federated.partition import ghost_exchange_buckets
 from repro.launch.mesh import production_chip_count
 from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_param_count
 from repro.sharding.fed import (
@@ -38,6 +49,11 @@ from repro.sharding.fed import (
     client_axis_of,
     cohort_padding,
     make_client_mesh,
+)
+from repro.sharding.tables import (
+    abstract_pod_chunk_args,
+    build_pod_sharded_chunk,
+    make_pod_mesh,
 )
 from repro.utils.hlo import collective_stats
 from repro.utils.roofline import RooflineReport
@@ -57,22 +73,56 @@ def _force_host_devices(n: int) -> None:
         + os.environ.get("XLA_FLAGS", ""))
 
 
+def synthetic_ghost_buckets(n_clients: int, n_max: int, g_max: int,
+                            n_pods: int, *, fill: float = 1.0, seed: int = 0):
+    """A partition-shaped ghost topology for lowering the pod chunk without
+    real data: each client's ghost slots point at uniform random (owner,
+    row) pairs, ``fill`` controlling the occupied fraction (the ghost-cut
+    knob the write-back bytes should track)."""
+    rng = np.random.default_rng(seed)
+    mask = (rng.random((n_clients, g_max)) < fill).astype(np.float32)
+    owner = rng.integers(0, n_clients, size=(n_clients, g_max)).astype(np.int32)
+    owner = np.where(mask > 0, owner, -1)
+    row = rng.integers(0, n_max, size=(n_clients, g_max)).astype(np.int32)
+    return ghost_exchange_buckets(owner, row, mask, n_pods)
+
+
 def dryrun_mesh(mesh_name: str, args) -> dict:
     """Lower one sharded round chunk on ``mesh_name``'s chip count and
-    report collectives + roofline. Returns the result row (status key
-    "ok"/"error")."""
+    report collectives + roofline. With ``--pods P`` the mesh is the 2-D
+    ``("pods", "clients")`` grid and the historical tables shard over the
+    pod axis (repro.sharding.tables) — the collectives then include the
+    ghost-bucket all-to-all and a cohort-sized (K-independent) write-back
+    all-gather instead of replicated-table traffic. Returns the result row
+    (status key "ok"/"error")."""
     chips = MESH_CHIPS.get(mesh_name, len(jax.devices()))
-    mesh = make_client_mesh(chips)
-    axis = client_axis_of(mesh)
     K = args.clients or chips
-    pad = cohort_padding(K, chips)
+    m = args.cohort or K
+    pods = args.pods
     mcfg = method_config("fedais", local_epochs=4, batch_cap=args.n_max)
-    vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0])
-    chunk = build_sharded_chunk(vm, mesh, axis, m_real=K,
-                                light_stats=_LIGHT_STATS)
-    sargs = abstract_chunk_args(
-        mesh, n_clients=K, cohort=K + pad, n_max=args.n_max,
-        g_max=args.g_max, n_feat=args.features, n_classes=args.classes)
+    buckets = None
+    pad = cohort_padding(m, chips)
+    if pods:
+        if chips % pods:
+            raise ValueError(f"{chips} chips do not split into {pods} pods")
+        mesh = make_pod_mesh(pods, chips // pods)
+        buckets = synthetic_ghost_buckets(K, args.n_max, args.g_max, pods,
+                                          fill=args.ghost_fill)
+        vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0],
+                                 ghost_source="prefetched")
+        chunk = build_pod_sharded_chunk(vm, mesh, m, buckets, _LIGHT_STATS)
+        sargs = abstract_pod_chunk_args(
+            mesh, buckets, n_clients=K, cohort=m + pad, n_max=args.n_max,
+            g_max=args.g_max, n_feat=args.features, n_classes=args.classes)
+    else:
+        mesh = make_client_mesh(chips)
+        axis = client_axis_of(mesh)
+        vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0])
+        chunk = build_sharded_chunk(vm, mesh, axis, m_real=m,
+                                    light_stats=_LIGHT_STATS)
+        sargs = abstract_chunk_args(
+            mesh, n_clients=K, cohort=m + pad, n_max=args.n_max,
+            g_max=args.g_max, n_feat=args.features, n_classes=args.classes)
 
     t0 = time.time()
     compiled = chunk.lower(*sargs).compile()
@@ -83,9 +133,9 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
     coll = collective_stats(compiled.as_text())
 
     n_params = gcn_param_count(args.features, args.classes)
-    # per-round model flops: J epochs x batch fwd+bwd over K clients
+    # per-round model flops: J epochs x batch fwd+bwd over the m-cohort
     flops_model = 3.0 * gcn_flops_per_node(args.features, args.classes, 8.0) \
-        * args.n_max * mcfg.local_epochs * K
+        * args.n_max * mcfg.local_epochs * m
     rep = RooflineReport(
         arch="fedgcn-graphsage", shape=f"K{K}", mesh=mesh_name, chips=chips,
         hlo_flops=float(cost.get("flops", 0.0)) * chips,
@@ -95,16 +145,40 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
     )
     result = {
         "status": "ok", "arch": "fedgcn-graphsage", "shape": f"K{K}",
-        "mesh": mesh_name, "chips": chips, "clients": K, "cohort_pad": pad,
+        "mesh": mesh_name, "chips": chips, "clients": K, "cohort": m,
+        "cohort_pad": pad,
         "gcn_params": n_params,
         "compile_s": round(time.time() - t0, 1),
         "collectives": {k: int(v) for k, v in coll.bytes_by_kind.items()},
         "roofline": rep.row(),
         "memory": {"temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
     }
+    if pods:
+        # the table-placement ledger the pod mode exists for: per-device
+        # table memory is K/P rows, the ghost exchange is bucket-sized
+        # (scales with the ghost-edge cut), and the write-back moves cohort
+        # rows — compare against what replicating the (K, n_tot, H1) table
+        # per chunk costs the client-sharded executor
+        n_tot = args.n_max + args.g_max
+        table_bytes = K * n_tot * HIDDEN[0] * 4
+        result["pods"] = {
+            "n_pods": pods,
+            "ghost_cut_entries": buckets.n_entries,
+            "bucket_size": buckets.bucket_size,
+            "all_to_all_bytes": int(coll.bytes_by_kind.get("all-to-all", 0)),
+            "all_gather_bytes": int(coll.bytes_by_kind.get("all-gather", 0)),
+            "replicated_hist1_bytes": table_bytes,
+            "table_shard_rows_per_pod": buckets.rows_per_pod,
+        }
     print(rep.pretty())
-    print(f"    [{mesh_name}] K={K} compile={result['compile_s']}s "
-          f"collectives: {coll.summary()}")
+    print(f"    [{mesh_name}] K={K}" + (f" pods={pods}" if pods else "")
+          + f" compile={result['compile_s']}s collectives: {coll.summary()}")
+    if pods:
+        p = result["pods"]
+        print(f"    [{mesh_name}] ghost-cut={p['ghost_cut_entries']} entries; "
+              f"write-back a2a={p['all_to_all_bytes']:,}B + "
+              f"ag={p['all_gather_bytes']:,}B vs replicated hist1 "
+              f"{p['replicated_hist1_bytes']:,}B")
     return result
 
 
@@ -114,6 +188,18 @@ def main(argv=None):
                     choices=["pod1", "pod2", "both", "host"],
                     help="pod chip counts, or 'host' = all existing devices")
     ap.add_argument("--clients", type=int, default=0, help="default: one per chip")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="clients selected per round (default: all K) — fix "
+                         "it while sweeping --clients to see which "
+                         "collectives scale with the total client count")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="shard the historical tables over this many pods "
+                         "(a ('pods','clients') 2-D mesh; 0 = replicated "
+                         "tables, cohort-only sharding)")
+    ap.add_argument("--ghost-fill", type=float, default=0.5,
+                    help="occupied fraction of ghost slots in the synthetic "
+                         "pod topology — the ghost-cut knob the --pods "
+                         "write-back bytes should track")
     ap.add_argument("--n-max", type=int, default=512)
     ap.add_argument("--g-max", type=int, default=256)
     ap.add_argument("--features", type=int, default=128)
@@ -141,7 +227,9 @@ def main(argv=None):
             continue
         if args.out:
             os.makedirs(args.out, exist_ok=True)
-            with open(os.path.join(args.out, f"fedgcn_{mesh_name}.json"), "w") as f:
+            tag = f"_pods{args.pods}" if args.pods else ""
+            with open(os.path.join(args.out, f"fedgcn_{mesh_name}{tag}.json"),
+                      "w") as f:
                 json.dump(result, f, indent=1)
     return rc
 

@@ -11,15 +11,31 @@ from repro.sharding.specs import (
     decode_state_spec,
     param_spec_tree,
 )
+from repro.sharding.tables import (
+    POD_AXIS,
+    build_pod_sharded_chunk,
+    make_pod_mesh,
+    pad_tables_to_pods,
+    pairwise_sum,
+    pod_axes_of,
+    shard_tables_to_mesh,
+)
 
 __all__ = [
     "CLIENT_AXIS",
+    "POD_AXIS",
     "activation_rules",
     "batch_spec",
+    "build_pod_sharded_chunk",
     "build_sharded_chunk",
     "client_axis_of",
     "cohort_padding",
     "decode_state_spec",
     "make_client_mesh",
+    "make_pod_mesh",
+    "pad_tables_to_pods",
+    "pairwise_sum",
     "param_spec_tree",
+    "pod_axes_of",
+    "shard_tables_to_mesh",
 ]

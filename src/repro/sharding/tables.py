@@ -1,0 +1,301 @@
+"""Pod-sharded historical tables: the second unit of federated scale-out.
+
+Client sharding (repro.sharding.fed) splits each round's cohort across
+devices but still replicates the (K, n_tot, H1) ``hist1``/``age`` tables —
+and the (K, g_max, F) synced-ghost and (K, n_max) prev-loss tables — on
+every device, and re-broadcasts them at every chunk boundary. That is the
+cross-client communication/memory wall FedGCN-style systems hit first: per
+-device table memory and write-back traffic both scale with the TOTAL
+client count K, not with the work a round actually does.
+
+This module shards the tables themselves over a ``("pods", "clients")``
+2-D mesh: pod p owns the table rows of its resident clients (the K axis
+block-partitioned over the ``"pods"`` axis with ``NamedSharding``), while
+each round's cohort still splits over all P×C devices. Three exchanges
+replace the replicated-table dataflow, sized by what the round touches
+rather than by K:
+
+* **ghost-bucket all-to-all** — the cross-pod embedding synchronization.
+  ``pull_ghosts`` cannot gather from a replicated ``hist1_all`` snapshot
+  any more, so each round starts with a ``jax.lax.all_to_all`` over
+  partition-time send/recv buckets (``federated.partition.
+  ghost_exchange_buckets``): pod p sends pod q exactly the deduplicated
+  owner rows q's residents reference as ghosts. Bytes scale with the
+  ghost-edge cut — the quantity FedAIS's adaptive sync bounds — not with
+  K·n_tot·H1.
+* **owner-keyed cohort fetch** — the m selected clients' own table rows
+  are pulled from their owner pods by a masked psum (each row has exactly
+  one non-zero contributor), O(m·n_tot) bytes.
+* **cohort write-back** — fresh rows all-gather across the cohort axis
+  (O(m·n_tot), K-independent) and each pod scatters only the rows it owns
+  (out-of-range ids drop, so dummies and non-residents never land).
+
+Aggregation stays the weighted psum all-reduce of the client-sharded
+executor, with an optional ``reduce="pairwise"`` mode that gathers the
+per-device partial sums and reduces them in a fixed fp32 binary tree —
+deterministic summation order for when all-reduce reassociation drift
+matters at depth.
+
+Parity contract (tests/test_pod_sharding.py): history is allclose to the
+client-sharded and unsharded fused runs with every discrete column exact —
+the per-client computation is identical (``pull_ghosts_prefetched`` hands
+each client the same round-start snapshot rows), only the merge's summation
+order differs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.federated.partition import GhostBuckets, pod_table_padding
+from repro.sharding.fed import CLIENT_AXIS
+
+POD_AXIS = "pods"
+
+
+def make_pod_mesh(n_pods: int, n_client_shards: Optional[int] = None) -> Mesh:
+    """A ``(n_pods, n_client_shards)`` mesh with ``("pods", "clients")``
+    axes: tables shard over the first, each round's cohort over both. With
+    ``n_client_shards=None`` all visible devices are used (they must split
+    evenly). On CPU, force fake devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    devs = jax.devices()
+    if n_pods < 1:
+        raise ValueError(f"need n_pods >= 1, got {n_pods}")
+    if n_client_shards is None:
+        if len(devs) % n_pods:
+            raise ValueError(
+                f"{len(devs)} devices do not split into {n_pods} pods; pass "
+                "n_client_shards explicitly")
+        n_client_shards = len(devs) // n_pods
+    n = n_pods * n_client_shards
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"make_pod_mesh needs 1..{len(devs)} devices, asked for "
+            f"{n_pods}x{n_client_shards} (force more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh((n_pods, n_client_shards), (POD_AXIS, CLIENT_AXIS),
+                         devices=devs[:n])
+
+
+def pod_axes_of(mesh: Mesh) -> Optional[tuple[str, str]]:
+    """The (table, cohort) axis pair of a pod mesh: ``("pods", "clients")``
+    when both axes are present, else None (not a pod mesh)."""
+    if POD_AXIS in mesh.shape and CLIENT_AXIS in mesh.shape:
+        return (POD_AXIS, CLIENT_AXIS)
+    return None
+
+
+def pad_tables_to_pods(tables, n_pods: int):
+    """Pad each (K, ...) table with zero rows so K splits evenly over the
+    pod axis. Returns the padded tuple (no-op when already divisible)."""
+    K = tables[0].shape[0]
+    pad = pod_table_padding(K, n_pods)      # the bucket builder's Kp rule
+    if not pad:
+        return tuple(tables)
+    return tuple(
+        jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1)) for t in tables)
+
+
+def shard_tables_to_mesh(tables, mesh: Mesh):
+    """Commit each (Kp, ...) table to the mesh sharded over the pod axis on
+    its leading (client) dimension — pod p holds its residents' rows,
+    replicated across the ``"clients"`` axis."""
+    sh = NamedSharding(mesh, P(POD_AXIS))
+    return tuple(jax.device_put(t, sh) for t in tables)
+
+
+def pairwise_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic fp32 binary-tree reduction over the leading axis:
+    pairs sum left-to-right level by level, so the association order is
+    fixed by the leading-axis length alone (never by how XLA schedules an
+    all-reduce). Used by ``reduce="pairwise"`` merges."""
+    while x.shape[0] > 1:
+        n = x.shape[0]
+        even = (n // 2) * 2
+        y = x[0:even:2] + x[1:even:2]
+        if n % 2:
+            y = jnp.concatenate([y, x[even:]], axis=0)
+        x = y
+    return x[0]
+
+
+def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
+    """The per-round client half over a ``("pods", "clients")`` mesh: ghost
+    all-to-all, owner-keyed cohort fetch, vmapped LocalUpdate on each
+    device's cohort slice, weighted merge, and the pod-local write-back.
+    Table in/out specs are P("pods"); cohort specs P(("pods", "clients"))."""
+    P_, C = mesh.shape[POD_AXIS], mesh.shape[CLIENT_AXIS]
+    rpp = buckets.rows_per_pod
+    axes = (POD_AXIS, CLIENT_AXIS)
+
+    def step(params, client, feats_all, hist_sh, age_sh, gfeat_sh, pl_sh,
+             sel, tau, fanouts, eoff, keys, w,
+             send_client, send_row, send_mask, recv_src, recv_pos, recv_mask):
+        p_i = jax.lax.axis_index(POD_AXIS)
+        c_i = jax.lax.axis_index(CLIENT_AXIS)
+        mL = keys.shape[0]
+
+        # ---- ghost-bucket all-to-all: round-start hist1 rows cross pods ----
+        # send_* arrive (1, P, B) — this pod's row of the (P, P, B) plan
+        sc, sr, sm = send_client[0], send_row[0], send_mask[0]
+        sbuf = hist_sh[sc, sr] * sm[..., None]                  # (P, B, H1)
+        rbuf = jax.lax.all_to_all(sbuf, POD_AXIS, 0, 0, tiled=True)
+        # reassemble my residents' ghost-source rows from the received buckets
+        gh_res = rbuf[recv_src, recv_pos] * recv_mask[..., None]  # (rpp, g, H1)
+
+        # ---- owner-keyed fetch of the cohort's table rows ----
+        # exactly one (pod, clients=0) device contributes each row; the psum
+        # broadcasts it (ints stay exact, floats gain only +0.0 terms)
+        owner_pod = sel // rpp                 # padded dummies (id Kp) -> P_
+        local_row = jnp.clip(sel - owner_pod * rpp, 0, rpp - 1)
+        own = (owner_pod == p_i) & (c_i == 0)
+
+        def fetch(tbl):
+            rows = jnp.where(own.reshape((-1,) + (1,) * (tbl.ndim - 1)),
+                             tbl[local_row], 0)
+            return jax.lax.psum(rows, axes)
+
+        d = p_i * C + c_i
+
+        def chunk_of(tbl):
+            return jax.lax.dynamic_slice_in_dim(fetch(tbl), d * mL, mL, 0)
+
+        hist_l = chunk_of(hist_sh)
+        age_l = chunk_of(age_sh)
+        gfeat_l = chunk_of(gfeat_sh)
+        pl_l = chunk_of(pl_sh)
+        ghs_l = chunk_of(gh_res)               # (mL, g_max, H1) ghost sources
+
+        # layer-0 ghost features: local gather on the replicated features
+        # (same clamped indices pull_ghosts would use)
+        owner = jnp.maximum(client["ghost_owner"], 0)
+        gfs_l = feats_all[owner, client["ghost_row"]]     # (mL, g_max, F)
+
+        out = vm(params, client, gfs_l, ghs_l, hist_l, age_l, gfeat_l, pl_l,
+                 tau, fanouts, eoff, keys)
+        new_params, new_hist1, new_age, new_gfeat, stats = out
+
+        # ---- aggregation: weighted all-reduce, or fp32 pairwise tree ----
+        if reduce == "psum":
+            wsum = jax.lax.psum(w.sum(), axes)
+
+            def wmean(x):
+                wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+                return jax.lax.psum((x * wb).sum(axis=0), axes) / wsum
+        else:   # "pairwise": association fixed by device count, not by XLA
+            wsum = pairwise_sum(jax.lax.all_gather(w.sum(), axes))
+
+            def wmean(x):
+                wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+                part = jax.lax.all_gather((x * wb).sum(axis=0), axes, axis=0)
+                return pairwise_sum(part) / wsum
+
+        agg = jax.tree_util.tree_map(wmean, new_params)
+
+        # ---- write-back: cohort all-gather + pod-local scatter ----
+        # fresh rows cross the mesh once (O(m * n_tot), K-independent); each
+        # pod then scatters only its residents — non-owned and dummy rows
+        # get an out-of-range target and the scatter drops them
+        def gather_cohort(x):
+            return jax.lax.all_gather(x, axes, axis=0, tiled=True)
+
+        tgt = jnp.where(owner_pod == p_i, sel - p_i * rpp, rpp)
+        hist_sh = hist_sh.at[tgt].set(gather_cohort(new_hist1))
+        age_sh = age_sh.at[tgt].set(gather_cohort(new_age))
+        gfeat_sh = gfeat_sh.at[tgt].set(gather_cohort(new_gfeat))
+        pl_sh = pl_sh.at[tgt].set(gather_cohort(stats["loss_all"]))
+        return agg, hist_sh, age_sh, gfeat_sh, pl_sh, stats
+
+    t, c, r = P(POD_AXIS), P(axes), P()
+    return shard_map(
+        step, mesh=mesh,
+        in_specs=(r, c, r, t, t, t, t, r, r, c, r, c, c, t, t, t, t, t, t),
+        out_specs=(r, t, t, t, t, c),
+        check_rep=False)
+
+
+def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
+                            buckets: GhostBuckets,
+                            light_stats: Sequence[str], *,
+                            reduce: str = "psum"):
+    """The pod-sharded twin of ``sharding.fed.build_sharded_chunk``: one
+    jitted donated chunk scanning ``round_step`` over S rounds with the
+    historical tables resident as pod shards.
+
+    Same argument order as the client-sharded chunk; the four table
+    arguments arrive padded to ``buckets.n_clients_padded`` rows and
+    committed to the mesh with ``P("pods")`` shardings
+    (``pad_tables_to_pods`` + ``shard_tables_to_mesh``). ``vm`` must be the
+    ``ghost_source="prefetched"`` vmapped LocalUpdate. Cohort padding uses
+    dummy id ``n_clients_padded`` (fully out of range of the padded tables,
+    so fetches are zero and write-backs drop). ``reduce`` picks the merge:
+    ``"psum"`` (weighted all-reduce) or ``"pairwise"`` (fp32 tree)."""
+    if reduce not in ("psum", "pairwise"):
+        raise ValueError(f"unknown reduce {reduce!r}; known: psum | pairwise")
+    step = _pod_step(vm, mesh, buckets, reduce)
+    light_stats = tuple(light_stats)
+    bkt = tuple(jnp.asarray(a) for a in (
+        buckets.send_client, buckets.send_row, buckets.send_mask,
+        buckets.recv_src, buckets.recv_pos, buckets.recv_mask))
+
+    def chunk(params, hist1, age, ghost_feat, prev_loss, key, arrays,
+              sel_stack, fan_stack, w_stack, eoffs, tau):
+        m_pad = sel_stack.shape[1]
+        pad = m_pad - m_real
+
+        def round_step(carry, xs):
+            params, hist1, age, ghost_feat, prev_loss, key = carry
+            sel, fanouts, w, eoff = xs
+            # the unsharded executor's exact key chain: split for the real
+            # cohort only, dummies ride along on a constant zero key
+            ks = jax.random.split(key, m_real + 1)
+            key, keys = ks[0], ks[1:]
+            if pad:
+                keys = jnp.concatenate(
+                    [keys, jnp.zeros((pad,) + keys.shape[1:], keys.dtype)])
+            client = {k: v[sel] for k, v in arrays.items()}
+            out = step(params, client, arrays["features"], hist1, age,
+                       ghost_feat, prev_loss, sel, tau, fanouts, eoff, keys,
+                       w, *bkt)
+            params, hist1, age, ghost_feat, prev_loss, stats = out
+            light = {k: stats[k][:m_real] for k in light_stats}
+            return (params, hist1, age, ghost_feat, prev_loss, key), light
+
+        return jax.lax.scan(round_step,
+                            (params, hist1, age, ghost_feat, prev_loss, key),
+                            (sel_stack, fan_stack, w_stack, eoffs))
+
+    return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4, 5))
+
+
+def abstract_pod_chunk_args(mesh: Mesh, buckets: GhostBuckets, *,
+                            n_clients: int, cohort: int, n_max: int,
+                            g_max: int, n_feat: int, n_classes: int,
+                            max_deg: int = 16, rounds: int = 1):
+    """ShapeDtypeStructs matching ``build_pod_sharded_chunk``'s signature —
+    ``sharding.fed.abstract_chunk_args`` (same argument order, same client
+    arrays) with the four table leaves re-struck: padded to
+    ``buckets.n_clients_padded`` rows and carrying ``P("pods")``
+    NamedShardings. The ``--pods`` dry-run path."""
+    from repro.models.gcn import HIDDEN
+
+    from repro.sharding.fed import abstract_chunk_args
+
+    base = list(abstract_chunk_args(
+        mesh, n_clients=n_clients, cohort=cohort, n_max=n_max, g_max=g_max,
+        n_feat=n_feat, n_classes=n_classes, max_deg=max_deg, rounds=rounds))
+    t = NamedSharding(mesh, P(POD_AXIS))
+    Kp, n_tot = buckets.n_clients_padded, n_max + g_max
+    base[1] = jax.ShapeDtypeStruct((Kp, n_tot, HIDDEN[0]), jnp.float32,
+                                   sharding=t)           # hist1
+    base[2] = jax.ShapeDtypeStruct((Kp, n_tot), jnp.int32, sharding=t)  # age
+    base[3] = jax.ShapeDtypeStruct((Kp, g_max, n_feat), jnp.float32,
+                                   sharding=t)           # ghost features
+    base[4] = jax.ShapeDtypeStruct((Kp, n_max), jnp.float32,
+                                   sharding=t)           # prev loss
+    return tuple(base)

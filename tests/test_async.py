@@ -345,3 +345,100 @@ def test_async_history_extras_absent_under_sync(small_fed):
                     clients_per_round=3, seed=0).run()
     assert "staleness_max" not in res.history
     assert "virtual_time" not in res.history
+
+
+# ---------------------------------------------------------------------------
+# BanditStrategy reward attribution under async partial quorums
+# ---------------------------------------------------------------------------
+
+class _RecordingBandit:
+    """Stands in for FanoutBandit: records (client, reward) update calls."""
+
+    def __init__(self):
+        self.updates = []
+
+    def choose(self, k):
+        return 10
+
+    def update(self, k, reward):
+        self.updates.append((int(k), float(reward)))
+
+
+def _bandit_harness(n_clients=3):
+    from types import SimpleNamespace
+
+    from repro.api.strategies import BanditStrategy
+
+    eng = SimpleNamespace(fed=SimpleNamespace(n_clients=n_clients), seed=0)
+    strat = BanditStrategy(method_config("fedgraph"))
+    state = SimpleNamespace(round=0, last_staleness=None)
+    strat.setup(eng, state)
+    strat.bandit = _RecordingBandit()
+    return eng, strat, state
+
+
+def _stats(losses):
+    # BanditStrategy reads epoch_losses means; one epoch keeps it literal
+    return {"epoch_losses": np.asarray(losses, np.float64).reshape(-1, 1)}
+
+
+def test_bandit_duplicate_in_flight_rewards_oldest_to_freshest():
+    """A client selected twice while in flight merges both updates in one
+    buffer, restacked by dispatch version. Rewards must telescope oldest ->
+    freshest — the reward stream a sequential run would have produced — and
+    the strategy's last-seen loss must end at the FRESHEST update, matching
+    the engine write-back's dedup-keeps-freshest rule."""
+    eng, strat, state = _bandit_harness()
+    state.round, state.last_staleness = 0, None
+    strat.post_round(eng, state, np.array([0]), _stats([1.0]))
+
+    # merge at version 2: two in-flight updates from client 0 (dispatched at
+    # versions 1 and 2), already sorted by dispatch version by the scheduler
+    state.round, state.last_staleness = 2, np.array([1, 0])
+    strat.post_round(eng, state, np.array([0, 0]), _stats([0.9, 0.8]))
+    state.last_staleness = None
+    assert strat.bandit.updates == [
+        (0, 0.0),                        # first observation: no baseline
+        (0, pytest.approx(1.0 - 0.9)),   # v1 vs the v0 loss
+        (0, pytest.approx(0.9 - 0.8)),   # v2 vs the v1 loss
+    ]
+    assert strat.last_client_loss[0] == pytest.approx(0.8)
+    assert strat.last_reward_version[0] == 2
+
+
+def test_bandit_skips_out_of_order_straggler_reward():
+    """A straggler can merge AFTER a fresher update from the same client
+    (partial quorums reorder arrivals across merges). Its loss predates the
+    strategy's baseline, so rewarding it would credit the fanout arm with
+    an inverted improvement — the audit pins that it is skipped and the
+    baseline keeps the freshest loss."""
+    eng, strat, state = _bandit_harness()
+    # version-1 update merges first (fresh)
+    state.round, state.last_staleness = 1, np.array([0])
+    strat.post_round(eng, state, np.array([0]), _stats([0.5]))
+    n_updates = len(strat.bandit.updates)
+
+    # the version-0 straggler (staleness 2) arrives one merge later with the
+    # worse loss it computed before the fresh update existed
+    state.round, state.last_staleness = 2, np.array([2])
+    strat.post_round(eng, state, np.array([0]), _stats([1.4]))
+    assert len(strat.bandit.updates) == n_updates     # no reward recorded
+    assert strat.last_client_loss[0] == pytest.approx(0.5)
+    assert strat.last_reward_version[0] == 1
+
+    # a later in-order update resumes rewarding against the kept baseline
+    state.round, state.last_staleness = 3, np.array([0])
+    strat.post_round(eng, state, np.array([0]), _stats([0.3]))
+    assert strat.bandit.updates[-1] == (0, pytest.approx(0.5 - 0.3))
+
+
+def test_bandit_async_engine_run_with_duplicates(small_fed):
+    """End-to-end: fedgraph under a partial quorum with re-selection while
+    in flight completes and keeps per-client reward versions monotone."""
+    g, fed = small_fed
+    eng = FedEngine(g, fed, method_config("fedgraph"), rounds=4,
+                    clients_per_round=3, seed=0,
+                    scheduler=AsyncScheduler(quorum=2, concurrency=4))
+    res = eng.run()
+    assert np.isfinite(res.final["loss"])
+    assert (eng.strategy.last_reward_version >= -1).all()

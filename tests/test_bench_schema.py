@@ -1,0 +1,117 @@
+"""BENCH_round.json schema guard (benchmarks.perf_round.validate_bench_round).
+
+perf_round.py rewrites BENCH_round.json from three different run modes
+(plain, --sharded, --sharded-only merge), each preserving parts of the
+previous payload — so a malformed file would propagate forward silently
+and surface only as an undiagnosable perf-smoke failure. The validator
+refuses to write such payloads; these tests pin what it catches.
+"""
+import copy
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO_ROOT)           # benchmarks/ is a repo-root package
+
+from benchmarks.perf_round import validate_bench_round  # noqa: E402
+
+
+def good_payload():
+    return {
+        "bench": "round_throughput",
+        "backend": "cpu",
+        "devices": 1,
+        "quick": True,
+        "fused_speedup": 3.5,
+        "sharded_rounds_per_s": 4.5,
+        "sharded_devices": 8,
+        "rows": [
+            {"variant": "stepwise", "rounds_per_s": 3.0},
+            {"variant": "fused", "rounds_per_s": 10.5,
+             "speedup_vs_stepwise": 3.5},
+            {"variant": "sharded_fused", "rounds_per_s": 4.5, "devices": 8},
+            {"variant": "eval_gather", "ms_per_eval": 2.0},
+        ],
+    }
+
+
+def test_good_payload_validates():
+    assert validate_bench_round(good_payload()) == []
+
+
+def test_checked_in_bench_file_validates():
+    with open(os.path.join(REPO_ROOT, "BENCH_round.json")) as f:
+        assert validate_bench_round(json.load(f)) == []
+
+
+def test_non_dict_and_missing_keys():
+    assert validate_bench_round([1, 2]) != []
+    for key in ("bench", "devices", "fused_speedup", "sharded_rounds_per_s",
+                "sharded_devices", "rows"):
+        p = good_payload()
+        del p[key]
+        assert any(key in e for e in validate_bench_round(p)), key
+
+
+def test_gated_rows_must_not_be_silently_nulled():
+    # dropping the stepwise row (a bad merge) is an error...
+    p = good_payload()
+    p["rows"] = [r for r in p["rows"] if r["variant"] != "stepwise"]
+    assert any("stepwise" in e for e in validate_bench_round(p))
+    # ...unless explicitly permitted (fresh --sharded-only run, no prev)
+    assert validate_bench_round(p, require_gated=False) == []
+
+    # a gated row whose throughput got nulled is never OK
+    p2 = good_payload()
+    p2["rows"][1]["rounds_per_s"] = None
+    assert any("fused" in e for e in validate_bench_round(p2))
+    p3 = good_payload()
+    p3["rows"][0]["rounds_per_s"] = 0.0
+    assert any("stepwise" in e for e in validate_bench_round(p3))
+
+    # gated rows present but the speedup column nulled: the gate's input
+    # vanished even though both measurements exist
+    p4 = good_payload()
+    p4["fused_speedup"] = None
+    assert any("fused_speedup" in e for e in validate_bench_round(p4))
+
+
+def test_row_and_type_errors():
+    p = good_payload()
+    p["rows"].append({"rounds_per_s": 1.0})        # no variant label
+    assert any("variant" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["rows"] = []
+    assert any("rows" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["devices"] = "one"
+    assert any("devices" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["quick"] = "yes"
+    assert any("quick" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["bench"] = "something_else"
+    assert any("bench" in e for e in validate_bench_round(p))
+
+
+def test_sharded_column_consistency():
+    # value and device count must null together (the carry-forward logic
+    # moves them as a pair)
+    p = good_payload()
+    p["sharded_devices"] = None
+    assert any("together" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["sharded_rounds_per_s"] = None
+    p["sharded_devices"] = None
+    assert validate_bench_round(p) == []
+    p = good_payload()
+    p["sharded_rounds_per_s"] = -1.0
+    assert any("sharded_rounds_per_s" in e for e in validate_bench_round(p))
+
+
+def test_validator_is_pure():
+    p = good_payload()
+    snapshot = copy.deepcopy(p)
+    validate_bench_round(p)
+    assert p == snapshot

@@ -1,0 +1,209 @@
+"""Pod-sharded historical tables (repro.sharding.tables) — the parity tier.
+
+Contract: with the (K, n_tot, H1) tables sharded over the pod axis and the
+ghost pull rebuilt as a bucketed cross-pod all-to-all, history stays
+**allclose** to both the client-sharded and the unsharded fused executors
+with every discrete column **exact** — the per-client computation is
+bit-identical (``pull_ghosts_prefetched`` hands each client the same
+round-start snapshot rows the replicated-table gather would), so the only
+drift source is the merge's summation order, exactly as in the PR-4
+client-sharded tier.
+
+Multi-device tests skip on a single-device host; CI's ``sharded`` lane runs
+this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and
+covers the 2/4/8-pod splits of the 8-device grid plus the ragged-cohort and
+empty-pod (pods owning only padding rows) edge cases.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    FedEngine,
+    LossBiasedSelector,
+    SyncScheduler,
+    available_methods,
+    method_config,
+)
+from repro.federated.partition import partition_graph
+from repro.sharding.fed import make_client_mesh
+from repro.sharding.tables import make_pod_mesh
+
+pytestmark = pytest.mark.sharded
+
+N_DEV = len(jax.devices())
+needs_devices = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs >=8 devices; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+EXACT_KEYS = ("tau", "comm_total", "comm_embed", "flops", "wall_clock")
+CLOSE_KEYS = ("test_acc", "test_loss")
+
+# the 8-device grid factored into every pod split the issue names
+POD_SPLITS = ((2, 4), (4, 2), (8, 1))
+
+
+def _run(g, fed, *, mesh=None, m=4, rounds=4, method="fedais", seed=0, **kw):
+    eng = FedEngine(g, fed, method_config(method, tau0=4), seed=seed,
+                    rounds=rounds, clients_per_round=m, eval_every=2,
+                    mesh=mesh, **kw)
+    return eng, eng.run()
+
+
+def _assert_allclose_history(ref, got):
+    for k in EXACT_KEYS:
+        assert ref.history[k] == got.history[k], f"history[{k!r}] diverged"
+    for k in CLOSE_KEYS:
+        np.testing.assert_allclose(
+            np.asarray(got.history[k], np.float64),
+            np.asarray(ref.history[k], np.float64),
+            rtol=1e-4, atol=1e-6, err_msg=f"history[{k!r}]")
+
+
+# ---------------------------------------------------------------------------
+# pod-sharded vs client-sharded vs fused parity, across pod splits
+# ---------------------------------------------------------------------------
+
+@needs_devices
+@pytest.mark.parametrize("pods,clients", POD_SPLITS)
+def test_pod_matches_client_sharded_and_fused(small_fed, pods, clients):
+    g, fed = small_fed
+    eng_f, res_f = _run(g, fed)
+    eng_c, res_c = _run(g, fed, mesh=make_client_mesh(8))
+    eng_p, res_p = _run(g, fed, mesh=make_pod_mesh(pods, clients))
+    assert eng_f.last_executor == "fused"
+    assert eng_c.last_executor == "sharded_fused"
+    assert eng_p.last_executor == "pod_sharded"
+    _assert_allclose_history(res_f, res_p)
+    _assert_allclose_history(res_c, res_p)
+
+
+@needs_devices
+@pytest.mark.parametrize("method", sorted(available_methods()))
+def test_pod_parity_every_registered_method(small_fed, method):
+    """Every registered method whose components clear the pod gates runs
+    pod-sharded and must match its own fused run; the rest (generator /
+    bandit strategies have per-round host hooks) fall soft down the chain
+    and still complete."""
+    g, fed = small_fed
+    eng_p, res_p = _run(g, fed, m=3, rounds=3, method=method,
+                        mesh=make_pod_mesh(4, 2))
+    if eng_p.pod_sharded_eligibility(3)[0] and eng_p.fused_eligibility()[0]:
+        assert eng_p.last_executor == "pod_sharded"
+        _, res_f = _run(g, fed, m=3, rounds=3, method=method)
+        _assert_allclose_history(res_f, res_p)
+    else:
+        assert eng_p.last_executor in ("fused", "stepwise")
+        assert np.isfinite(res_p.final["loss"])
+
+
+@needs_devices
+def test_pod_weighted_aggregation_parity(small_fed):
+    """WeightedFedAvg: the pod merge must fold the client-size weights."""
+    g, fed = small_fed
+    kw = dict(aggregator="weighted", scheduler=SyncScheduler(fused=True))
+    _, res_f = _run(g, fed, **kw)
+    eng_p, res_p = _run(g, fed, mesh=make_pod_mesh(2, 4), **kw)
+    assert eng_p.last_executor == "pod_sharded"
+    _assert_allclose_history(res_f, res_p)
+
+
+@needs_devices
+def test_pod_pairwise_merge_parity(small_fed):
+    """merge_reduce='pairwise' (fixed fp32 tree over gathered partials) is
+    a drop-in for the psum within the same allclose contract."""
+    g, fed = small_fed
+    _, res_f = _run(g, fed)
+    eng_p, res_p = _run(g, fed, mesh=make_pod_mesh(4, 2),
+                        merge_reduce="pairwise")
+    assert eng_p.last_executor == "pod_sharded"
+    _assert_allclose_history(res_f, res_p)
+
+
+# ---------------------------------------------------------------------------
+# ragged cohorts + empty pods: padding must be a provable no-op
+# ---------------------------------------------------------------------------
+
+def _one_chunk(g, fed, mesh, m, rounds=2):
+    eng = FedEngine(g, fed, method_config("fedais", tau0=4), seed=0, rounds=4,
+                    clients_per_round=m, eval_every=2, mesh=mesh)
+    state = eng.init_state()
+    eng._run_chunk(state, 0, rounds)
+    return eng, state
+
+
+@needs_devices
+def test_ragged_cohort_padding_is_noop(small_fed):
+    """m=3 over the 8-device (2, 4) grid pads 5 dummy clients whose id is
+    out of range of even the pod-padded tables. The full client-state
+    tables must match the unsharded run — ages (ints) exactly, so a stray
+    dummy or wrong-pod write-back to ANY row would be caught."""
+    g, fed = small_fed
+    _, st_u = _one_chunk(g, fed, None, 3)
+    eng_p, st_p = _one_chunk(g, fed, make_pod_mesh(2, 4), 3)
+    assert eng_p.last_executor == "pod_sharded"
+    np.testing.assert_array_equal(np.asarray(st_p.hist.age),
+                                  np.asarray(st_u.hist.age))
+    assert st_p.hist.hist1.shape == st_u.hist.hist1.shape   # K rows, unpadded
+    np.testing.assert_allclose(np.asarray(st_p.hist.hist1),
+                               np.asarray(st_u.hist.hist1),
+                               rtol=1e-2, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_p.prev_loss),
+                               np.asarray(st_u.prev_loss),
+                               rtol=1e-2, atol=1e-3)
+
+
+@needs_devices
+def test_empty_pods_zero_resident_clients(small_fed):
+    """K=3 clients over 8 pods: the tables pad to 8 rows and 5 pods own
+    only padding — their shards must stay inert (send empty buckets,
+    receive nothing, scatter nothing) while history matches the unsharded
+    run."""
+    g, _ = small_fed
+    fed3 = partition_graph(g, 3, alpha=0.5, seed=1)
+    _, res_u = _run(g, fed3, m=2, rounds=3)
+    eng_p, res_p = _run(g, fed3, m=2, rounds=3, mesh=make_pod_mesh(8, 1))
+    assert eng_p.last_executor == "pod_sharded"
+    _assert_allclose_history(res_u, res_p)
+
+
+@needs_devices
+def test_divisible_mode_falls_back_on_ragged_cohort(small_fed):
+    g, fed = small_fed
+    mesh = make_pod_mesh(2, 4)
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=2,
+                    clients_per_round=3, mesh=mesh,
+                    client_sharding="divisible")
+    ok, why = eng.pod_sharded_eligibility(3)
+    assert not ok and "divide" in why
+    assert eng.pod_sharded_eligibility(8)[0]
+    eng, res = _run(g, fed, mesh=mesh, m=3, rounds=2,
+                    client_sharding="divisible")
+    # cohort 3 does not divide 8 devices: pod AND client sharding both
+    # decline, the chunk runs fused
+    assert eng.last_executor == "fused"
+    assert np.isfinite(res.final["loss"])
+
+
+# ---------------------------------------------------------------------------
+# fallback chain: pod-sharded -> client-sharded -> fused -> stepwise
+# ---------------------------------------------------------------------------
+
+@needs_devices
+def test_pod_mesh_with_ineligible_fused_runs_stepwise(small_fed):
+    g, fed = small_fed
+    eng, res = _run(g, fed, m=3, rounds=2, mesh=make_pod_mesh(2, 4),
+                    selector=LossBiasedSelector())
+    assert eng.last_executor == "stepwise"
+    assert np.isfinite(res.final["loss"])
+
+
+@needs_devices
+def test_replicated_tables_use_client_sharded_executor(small_fed):
+    g, fed = small_fed
+    eng, res_c = _run(g, fed, mesh=make_pod_mesh(2, 4),
+                      table_sharding="replicated")
+    assert eng.last_executor == "sharded_fused"
+    _, res_f = _run(g, fed)
+    _assert_allclose_history(res_f, res_c)

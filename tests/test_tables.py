@@ -1,0 +1,285 @@
+"""Pod-sharded table machinery: the partition-time ghost-bucket builder
+(federated.partition.ghost_exchange_buckets), its simulated all-to-all
+round-trip against pull_ghosts, the prefetched pull, the pairwise merge
+reduction, and the engine's pod-mode wiring/validation.
+
+Everything here runs on a single device (the pod chunk itself is exercised
+by the (1, 1) mesh parity test below and by tests/test_pod_sharding.py on
+the multi-device CI lane). Property tests go through tests/hypcompat.py so
+they skip — not error — when hypothesis is missing.
+"""
+import jax
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.api import FedAvg, FedEngine, method_config
+from repro.core.historical import pull_ghosts, pull_ghosts_prefetched
+from repro.federated.partition import (
+    ghost_exchange_buckets,
+    pod_table_padding,
+    simulate_ghost_exchange,
+)
+from repro.sharding.fed import CLIENT_AXIS, cohort_padding, make_client_mesh
+from repro.sharding.tables import (
+    POD_AXIS,
+    make_pod_mesh,
+    pad_tables_to_pods,
+    pairwise_sum,
+    pod_axes_of,
+)
+
+pytestmark = pytest.mark.sharded
+
+
+def random_topology(seed: int, K: int, g_max: int, n_max: int, fill=0.7):
+    """A random partition-shaped ghost topology (owner/row/mask triplet)."""
+    rng = np.random.default_rng(seed)
+    gm = (rng.random((K, g_max)) < fill).astype(np.float32)
+    go = np.where(gm > 0, rng.integers(0, K, (K, g_max)), -1).astype(np.int32)
+    gr = rng.integers(0, n_max, (K, g_max)).astype(np.int32)
+    return go, gr, gm
+
+
+def bucket_entries(b):
+    """Decode the send buckets back into {(src, dst): [(owner, row), ...]}."""
+    out = {}
+    for p in range(b.n_pods):
+        for q in range(b.n_pods):
+            rows = []
+            for pos in range(b.bucket_size):
+                if b.send_mask[p, q, pos] > 0:
+                    rows.append((int(b.send_client[p, q, pos]) + p * b.rows_per_pod,
+                                 int(b.send_row[p, q, pos])))
+            out[(p, q)] = rows
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ghost-bucket builder properties (satellite: hypothesis via hypcompat)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 12), st.integers(1, 6),
+       st.integers(1, 5))
+def test_every_needed_pair_in_exactly_one_send_bucket(seed, K, g_max, n_pods):
+    """For every destination pod, each (owner, row) source pair referenced
+    by one of its residents appears exactly once — in the OWNER pod's
+    bucket for that destination and nowhere else."""
+    go, gr, gm = random_topology(seed, K, g_max, n_max=8)
+    b = ghost_exchange_buckets(go, gr, gm, n_pods)
+    ent = bucket_entries(b)
+    for (p, q), rows in ent.items():
+        # no duplicates within a bucket, and only rows pod p actually owns
+        assert len(rows) == len(set(rows))
+        assert all(o // b.rows_per_pod == p for o, _ in rows)
+    for q in range(n_pods):
+        needed = {(int(go[k, s]), int(gr[k, s]))
+                  for k in range(K) if k // b.rows_per_pod == q
+                  for s in range(g_max) if gm[k, s] > 0}
+        got = [pair for p in range(n_pods) for pair in ent[(p, q)]]
+        assert sorted(got) == sorted(needed)   # exactly once each
+    assert b.n_entries == sum(len(rows) for rows in ent.values())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 10), st.integers(1, 5),
+       st.integers(1, 4))
+def test_bucket_roundtrip_reproduces_pull_ghosts(seed, K, g_max, n_pods):
+    """Send buckets -> simulated all-to-all -> recv maps must reproduce the
+    gh half of pull_ghosts (the replicated-table gather) bit-for-bit for
+    every client, including masked slots (0) and padded residents."""
+    n_max = 6
+    go, gr, gm = random_topology(seed, K, g_max, n_max)
+    b = ghost_exchange_buckets(go, gr, gm, n_pods)
+    rng = np.random.default_rng(seed + 1)
+    hist1_all = rng.normal(size=(K, n_max + g_max, 3)).astype(np.float32)
+    feats_all = rng.normal(size=(K, n_max, 2)).astype(np.float32)
+    sim = simulate_ghost_exchange(b, hist1_all)
+    assert sim.shape == (b.n_clients_padded, g_max, 3)
+    for k in range(K):
+        _, gh = pull_ghosts(hist1_all, feats_all, go[k], gr[k], gm[k])
+        np.testing.assert_array_equal(sim[k], np.asarray(gh))
+    # padded resident rows received nothing
+    np.testing.assert_array_equal(sim[K:], 0.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 512), st.integers(1, 64))
+def test_cohort_and_table_padding_invariants(m, n_shards):
+    for pad_fn in (cohort_padding, pod_table_padding):
+        pad = pad_fn(m, n_shards)
+        assert 0 <= pad < n_shards
+        assert (m + pad) % n_shards == 0
+        if m % n_shards == 0:
+            assert pad == 0
+
+
+# ---------------------------------------------------------------------------
+# plain unit coverage of the same invariants (runs without hypothesis too)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,K,g_max,n_pods", [(0, 5, 4, 2), (1, 8, 3, 3),
+                                                 (2, 3, 2, 8), (3, 1, 1, 1)])
+def test_bucket_roundtrip_cases(seed, K, g_max, n_pods):
+    n_max = 5
+    go, gr, gm = random_topology(seed, K, g_max, n_max)
+    b = ghost_exchange_buckets(go, gr, gm, n_pods)
+    assert b.n_clients_padded == K + pod_table_padding(K, n_pods)
+    hist1_all = np.random.default_rng(seed).normal(
+        size=(K, n_max + g_max, 2)).astype(np.float32)
+    sim = simulate_ghost_exchange(b, hist1_all)
+    ref = np.where(gm[..., None] > 0, hist1_all[np.maximum(go, 0), gr], 0.0)
+    np.testing.assert_array_equal(sim[:K], ref)
+
+
+def test_ghost_buckets_validate_pod_count():
+    go, gr, gm = random_topology(0, 4, 2, 4)
+    with pytest.raises(ValueError, match="n_pods"):
+        ghost_exchange_buckets(go, gr, gm, 0)
+
+
+def test_pull_ghosts_prefetched_matches_tables_pull():
+    """Given the pre-gathered source rows, the prefetched pull is the
+    replicated-table pull bit-for-bit."""
+    K, n_max, g_max = 4, 5, 3
+    rng = np.random.default_rng(0)
+    hist1_all = rng.normal(size=(K, n_max + g_max, 4)).astype(np.float32)
+    feats_all = rng.normal(size=(K, n_max, 2)).astype(np.float32)
+    go, gr, gm = random_topology(1, K, g_max, n_max)
+    for k in range(K):
+        gf_ref, gh_ref = pull_ghosts(hist1_all, feats_all, go[k], gr[k], gm[k])
+        src_f = feats_all[np.maximum(go[k], 0), gr[k]]
+        src_h = hist1_all[np.maximum(go[k], 0), gr[k]]
+        gf, gh = pull_ghosts_prefetched(src_f, src_h, gm[k])
+        np.testing.assert_array_equal(np.asarray(gf), np.asarray(gf_ref))
+        np.testing.assert_array_equal(np.asarray(gh), np.asarray(gh_ref))
+
+
+def test_pairwise_sum_matches_flat_sum():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 5, 8, 13):
+        x = rng.normal(size=(n, 4)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(pairwise_sum(jax.numpy.asarray(x))),
+                                   x.astype(np.float64).sum(axis=0),
+                                   rtol=1e-6, atol=1e-6)
+    # association is fixed by length alone: ((a+b)+(c+d)) for n=4
+    a, b, c, d = (np.float32(v) for v in (1e8, -1e8, 3.25, 4.75))
+    got = float(pairwise_sum(jax.numpy.asarray([a, b, c, d])))
+    assert got == float((a + b) + (c + d))
+
+
+def test_pad_tables_to_pods():
+    t1 = jax.numpy.ones((5, 3))
+    t2 = jax.numpy.ones((5,), jax.numpy.int32)
+    p1, p2 = pad_tables_to_pods((t1, t2), 4)
+    assert p1.shape == (8, 3) and p2.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(p1[5:]), 0.0)
+    same = pad_tables_to_pods((t1,), 5)
+    assert same[0] is t1    # divisible: no copy
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers + engine wiring/validation
+# ---------------------------------------------------------------------------
+
+def test_make_pod_mesh_and_axis_resolution():
+    mesh = make_pod_mesh(1, 1)
+    assert dict(mesh.shape) == {POD_AXIS: 1, CLIENT_AXIS: 1}
+    assert pod_axes_of(mesh) == (POD_AXIS, CLIENT_AXIS)
+    assert pod_axes_of(make_client_mesh(1)) is None
+    with pytest.raises(ValueError, match="n_pods"):
+        make_pod_mesh(0, 1)
+    with pytest.raises(ValueError, match="devices"):
+        make_pod_mesh(len(jax.devices()) + 1, 1)
+    if len(jax.devices()) % 3:
+        with pytest.raises(ValueError, match="split"):
+            make_pod_mesh(3)
+
+
+def test_engine_validates_pod_options(small_fed):
+    g, fed = small_fed
+    with pytest.raises(ValueError, match="table_sharding"):
+        FedEngine(g, fed, method_config("fedais"), rounds=1,
+                  table_sharding="sometimes")
+    with pytest.raises(ValueError, match="merge_reduce"):
+        FedEngine(g, fed, method_config("fedais"), rounds=1,
+                  merge_reduce="magic")
+    # explicit pod mode demands a pod mesh
+    with pytest.raises(ValueError, match="pods"):
+        FedEngine(g, fed, method_config("fedais"), rounds=1,
+                  mesh=make_client_mesh(1), table_sharding="pods")
+
+
+def test_pod_eligibility_reasons(small_fed):
+    g, fed = small_fed
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1)
+    ok, why = eng.pod_sharded_eligibility()
+    assert not ok and "no mesh" in why
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1,
+                    mesh=make_client_mesh(1))
+    ok, why = eng.pod_sharded_eligibility()
+    assert not ok and "pods" in why
+    mesh = make_pod_mesh(1, 1)
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, mesh=mesh,
+                    table_sharding="replicated")
+    ok, why = eng.pod_sharded_eligibility()
+    assert not ok and "replicated" in why
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, mesh=mesh,
+                    client_sharding="off")
+    ok, why = eng.pod_sharded_eligibility()
+    assert not ok and "off" in why
+
+    class Trimmed(FedAvg):          # overrides aggregate, inherits the flag
+        def aggregate(self, stacked_params, weights=None):
+            return super().aggregate(stacked_params, weights)
+
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, mesh=mesh,
+                    aggregator=Trimmed())
+    ok, why = eng.pod_sharded_eligibility()
+    assert not ok and "allreduce_safe" in why
+    # divisible mode: cohort must split over ALL pods x clients devices
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, mesh=mesh,
+                    client_sharding="divisible")
+    assert eng.pod_sharded_eligibility(3)[0]    # 3 % 1 == 0
+    eng = FedEngine(g, fed, method_config("fedais"), rounds=1, mesh=mesh)
+    assert eng.pod_sharded_eligibility(3)[0]
+
+
+EXACT_KEYS = ("tau", "comm_total", "comm_embed", "flops", "wall_clock")
+CLOSE_KEYS = ("test_acc", "test_loss")
+
+
+def assert_allclose_history(ref, got):
+    for k in EXACT_KEYS:
+        assert ref.history[k] == got.history[k], f"history[{k!r}] diverged"
+    for k in CLOSE_KEYS:
+        np.testing.assert_allclose(
+            np.asarray(got.history[k], np.float64),
+            np.asarray(ref.history[k], np.float64),
+            rtol=1e-4, atol=1e-6, err_msg=f"history[{k!r}]")
+
+
+def test_single_device_pod_mesh_matches_fused(small_fed):
+    """A (1, 1) pod mesh routes the whole pod-sharded dataflow (ghost
+    all-to-all, owner fetch, pod-local scatter) on one device — everyday
+    fast-lane coverage of the chunk the multi-device lane scales out."""
+    g, fed = small_fed
+    kw = dict(seed=0, rounds=4, clients_per_round=3, eval_every=2)
+    res_u = FedEngine(g, fed, method_config("fedais", tau0=4), **kw).run()
+    eng = FedEngine(g, fed, method_config("fedais", tau0=4),
+                    mesh=make_pod_mesh(1, 1), **kw)
+    res_p = eng.run()
+    assert eng.last_executor == "pod_sharded"
+    assert_allclose_history(res_u, res_p)
+
+
+def test_replicated_table_mode_falls_back_to_client_sharding(small_fed):
+    """table_sharding='replicated' on a pod mesh keeps the PR-4 executor:
+    cohort sharded over the 'clients' axis, tables replicated."""
+    g, fed = small_fed
+    eng = FedEngine(g, fed, method_config("fedais", tau0=4), seed=0, rounds=2,
+                    clients_per_round=3, mesh=make_pod_mesh(1, 1),
+                    table_sharding="replicated")
+    eng.run()
+    assert eng.last_executor == "sharded_fused"
