@@ -1,0 +1,59 @@
+"""Serving-latency benchmark: the train -> checkpoint -> serve pipeline.
+
+Wraps ``repro.launch.serve_fed.run_pipeline`` (the CI serve-smoke entry
+point): trains a small federation, restores it into the warm-cache serving
+stack, drives mixed query/update traffic through both arrival disciplines,
+and reports the latency ledger as benchmark rows. The open-loop run writes
+the schema-guarded ``BENCH_serve.json`` at the repo root (the serving perf
+trajectory); the closed-loop run only reports rows.
+
+    PYTHONPATH=src python -m benchmarks.run --only perf_serve
+"""
+from __future__ import annotations
+
+
+def _row(payload: dict, variant: str) -> dict:
+    return {
+        "variant": variant,
+        "mode": payload["mode"],
+        "backend": payload["backend"],
+        "n_queries": payload["n_queries"],
+        "n_updates": payload["n_updates"],
+        "queries_per_s": payload["queries_per_s"],
+        "p50_ms": payload["p50_ms"],
+        "p99_ms": payload["p99_ms"],
+        "batch_occupancy": payload["batch_occupancy"],
+        "cache_hit_rate": payload["cache_hit_rate"],
+        "rows_refreshed": payload["rows_refreshed"],
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    import os
+    import tempfile
+
+    from repro.launch.serve_fed import build_args, run_pipeline
+
+    rows = []
+    # one training run, one checkpoint dir, two serving disciplines
+    ckpt_dir = tempfile.mkdtemp(prefix="perf_serve_ckpt_")
+    for mode in ("open", "closed"):
+        argv = ["--mode", mode, "--ckpt-dir", ckpt_dir]
+        if quick:
+            argv.append("--quick")
+        if mode == "closed":
+            # the open-loop payload is the canonical BENCH_serve.json;
+            # keep the closed-loop one out of the trajectory file
+            argv += ["--out", os.path.join(tempfile.gettempdir(),
+                                           "BENCH_serve_closed.json")]
+        payload = run_pipeline(build_args(argv))
+        rows.append(_row(payload, f"serve_{mode}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv, save_rows
+
+    rows = run(quick=True)
+    emit_csv("perf_serve", rows)
+    save_rows("perf_serve", rows)

@@ -22,6 +22,7 @@ BENCHMARKS = [
     "fig7_sensitivity",  # paper Fig. 7
     "fig8_async",        # extension: sync vs async scheduling wall-clock
     "perf_round",        # round throughput: fused scanned executor vs stepwise
+    "perf_serve",        # serving latency: checkpoint-backed online inference
     "kernel_bench",      # kernel layer (us_per_call + oracle deltas)
     "roofline",          # §Roofline from the dry-run artifacts
 ]

@@ -7,7 +7,7 @@ dry-run shapes lower), on the reduced config of any assigned architecture.
 import argparse
 
 from repro.configs import list_archs
-from repro.launch.serve import serve
+from repro.launch.serve_lm_cli import serve
 
 
 def main():

@@ -1,3 +1,8 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.ckpt import (
+    latest_step,
+    load_checkpoint,
+    load_latest,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "load_latest", "latest_step"]

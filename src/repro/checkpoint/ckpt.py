@@ -36,9 +36,15 @@ def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
     }
     path = os.path.join(directory, f"step_{step:08d}.msgpack")
     tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, path)  # atomic
+    try:
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)  # atomic
+    finally:
+        # a failed pack/write must not leave a stray .tmp behind (latest_step
+        # ignores it, but the next save would silently clobber it)
+        if os.path.exists(tmp):
+            os.unlink(tmp)
     return path
 
 
@@ -53,11 +59,23 @@ def load_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
         if key not in payload:
             raise KeyError(f"checkpoint {path} missing key {key!r}")
         rec = payload[key]
-        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        # frombuffer returns a READ-ONLY view over the msgpack bytes; copy so
+        # callers holding the numpy leaf (e.g. for in-place mutation) don't
+        # hit "assignment destination is read-only"
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"]).copy()
         if tuple(arr.shape) != tuple(template.shape):
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != template {template.shape}")
         leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_latest(directory: str, like: PyTree) -> tuple[int, PyTree]:
+    """Restore the newest ``step_*.msgpack`` in ``directory`` (auto-picked
+    via ``latest_step``). Returns ``(step, tree)``."""
+    step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no step_*.msgpack checkpoints in {directory!r}")
+    return step, load_checkpoint(directory, step, like)
 
 
 def latest_step(directory: str) -> int | None:

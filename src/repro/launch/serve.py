@@ -1,74 +1,23 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-shared KV cache — the serve_step that decode dry-run shapes lower.
+"""Deprecated shim — the LM serving driver moved to
+``repro.launch.serve_lm_cli`` so that ``python -m repro.launch.serve_fed``
+(the federated GCN server, repro/serve) vs the LM stack is unambiguous.
 
-Usage:
-    PYTHONPATH=src python -m repro.launch.serve --arch mini --batch 4 --prompt-len 64 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve_lm_cli ...   # LM prefill/decode
+    PYTHONPATH=src python -m repro.launch.serve_fed ...      # federated GCN
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.launch.serve_lm_cli import main, serve  # noqa: F401
 
-from repro.configs import list_archs
-from repro.launch.train import get_train_config
-from repro.models import lm
-
-
-def serve(args) -> dict:
-    cfg = get_train_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_lm(key, cfg)
-    B, P, G = args.batch, args.prompt_len, args.gen
-    max_len = P + G + (cfg.n_image_tokens or 0)
-
-    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size, jnp.int32)
-    kw = {}
-    if cfg.n_image_tokens:
-        kw["image_embeds"] = jnp.zeros((B, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype)
-    if cfg.n_encoder_layers:
-        kw["enc_frames"] = jnp.zeros((B, cfg.encoder_seq_len, cfg.d_model), cfg.jnp_dtype)
-
-    t0 = time.time()
-    last_logits, state = lm.lm_prefill(params, cfg, prompts, max_len, **kw)
-    prefill_s = time.time() - t0
-
-    decode = jax.jit(lambda p, s, t, pos: lm.decode_step(p, cfg, s, t, pos))
-    tok = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
-    generated = [tok]
-    offset = P + (cfg.n_image_tokens or 0)
-    t0 = time.time()
-    for i in range(G - 1):
-        logits, state = decode(params, state, tok, jnp.asarray(offset + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.time() - t0
-
-    out_tokens = jnp.concatenate(generated, axis=1)
-    tok_per_s = B * (G - 1) / max(decode_s, 1e-9)
-    print(f"arch={cfg.arch_id} batch={B} prompt={P} gen={G}")
-    print(f"prefill: {prefill_s*1e3:.1f} ms   decode: {tok_per_s:,.0f} tok/s "
-          f"({decode_s/max(G-1,1)*1e3:.2f} ms/step)")
-    return {
-        "prefill_s": prefill_s,
-        "decode_tok_s": tok_per_s,
-        "tokens": out_tokens,
-    }
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mini", choices=["mini", *list_archs()])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    serve(args)
-
+warnings.warn(
+    "repro.launch.serve is deprecated: the LM driver is now "
+    "repro.launch.serve_lm_cli (the federated GCN server is "
+    "repro.launch.serve_fed)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,189 @@
+"""End-to-end federated serving pipeline: train -> checkpoint -> serve.
+
+Trains a small federation with the FedEngine, checkpoints it via
+``save_federation``, restores it into a :class:`ServedModel` + warmed
+:class:`QueryEngine`, then drives heavy synthetic traffic (queries + live
+graph updates) through the :class:`LoadGenerator` and writes the
+schema-guarded ``BENCH_serve.json`` latency ledger at the repo root.
+
+    PYTHONPATH=src python -m repro.launch.serve_fed --quick
+    PYTHONPATH=src python -m repro.launch.serve_fed --quick --policy fresh \
+        --mode closed --backend gather
+
+``--parity-check`` additionally asserts the served "historical" logits over
+every node are bit-identical to the training-side eval path before any
+traffic runs (the same invariant tests/test_serve.py pins).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+
+def build_args(argv=None) -> argparse.Namespace:
+    from repro.serve import CACHE_POLICIES, LOAD_MODES, SERVE_BACKENDS
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny federation + 200 queries / 20 updates (CI)")
+    ap.add_argument("--dataset", default="pubmed")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="synthetic dataset scale (default: 64 quick, 8 full)")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="training rounds (default: 3 quick, 30 full)")
+    ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--method", default="fedais")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="segment", choices=SERVE_BACKENDS)
+    ap.add_argument("--warm", default="refresh", choices=("refresh", "tables"))
+    ap.add_argument("--policy", default="historical", choices=CACHE_POLICIES,
+                    help="dominant cache policy in the traffic mix")
+    ap.add_argument("--mode", default="open", choices=LOAD_MODES)
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--concurrency", type=int, default=8,
+                    help="closed-loop client count")
+    ap.add_argument("--queries", type=int, default=None,
+                    help="query count (default: 200 quick, 2000 full)")
+    ap.add_argument("--updates", type=int, default=None,
+                    help="streaming update count (default: 20 quick, 200 full)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: a temp dir)")
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    ap.add_argument("--parity-check", action="store_true",
+                    help="assert served historical logits == training eval "
+                         "logits bit-for-bit before running traffic")
+    args = ap.parse_args(argv)
+    args.scale = args.scale if args.scale is not None else (64 if args.quick else 8)
+    args.rounds = args.rounds if args.rounds is not None else (3 if args.quick else 30)
+    args.queries = args.queries if args.queries is not None else (200 if args.quick else 2000)
+    args.updates = args.updates if args.updates is not None else (20 if args.quick else 200)
+    return args
+
+
+def train_and_checkpoint(args, ckpt_dir: str):
+    """Run the federation and save the serving checkpoint. Returns
+    (graph, fed, state) so the caller can parity-check against it.
+    If ``ckpt_dir`` already holds a checkpoint and no parity check is
+    requested, training is skipped and the checkpoint reused (state=None)."""
+    from repro.api import FedEngine, method_config
+    from repro.checkpoint import latest_step
+    from repro.graph.data import make_dataset
+    from repro.federated.partition import partition_graph
+    from repro.serve import save_federation
+
+    g = make_dataset(args.dataset, scale=args.scale, seed=args.seed)
+    fed = partition_graph(g, args.clients, alpha=0.5, seed=args.seed)
+    have = latest_step(ckpt_dir)
+    if have is not None and not args.parity_check:
+        print(f"# reusing checkpoint step {have} in {ckpt_dir}")
+        return g, fed, None
+    mcfg = method_config(args.method, tau0=2)
+    engine = FedEngine(g, fed, mcfg, rounds=args.rounds,
+                       clients_per_round=args.cohort, seed=args.seed,
+                       eval_every=args.rounds)
+    state = engine.init_state()
+    result = engine.run(state)
+    path = save_federation(ckpt_dir, args.rounds, state)
+    print(f"# trained {args.method} {args.rounds} rounds on {args.dataset} "
+          f"scale={args.scale} K={args.clients}: "
+          f"test_acc={result.final.get('acc', float('nan')):.3f}")
+    print(f"# checkpoint: {path}")
+    return g, fed, state
+
+
+def parity_check(model, engine, graph, fed, state, seed: int) -> None:
+    """Served historical logits must be bit-identical to the training-side
+    full-graph eval path (build_eval_graph -> _eval_logits)."""
+    from repro.federated.server import _eval_logits, build_eval_graph
+
+    eg = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed,
+                          backend=model.backend)
+    want = np.asarray(_eval_logits(
+        state.params, eg["features"], eg["nbr_idx"], eg["nbr_mask"],
+        csr=eg.get("csr"), adj=eg.get("adj"), backend=model.backend))
+    n = graph.features.shape[0]
+    got = np.concatenate([
+        engine.query(np.arange(i, min(i + 128, n)), policy="historical")
+        for i in range(0, n, 128)])
+    if not np.array_equal(got, want):
+        raise AssertionError("served historical logits are not bit-identical "
+                             "to the training eval path")
+    print(f"# parity-check: {n} nodes bit-identical to build_eval_graph")
+
+
+def run_pipeline(args) -> dict:
+    """The full train -> checkpoint -> restore -> serve pipeline. Returns the
+    validated BENCH payload (and writes it to ``args.out``)."""
+    import jax
+
+    from repro.serve import (
+        LoadGenerator,
+        QueryEngine,
+        ServedModel,
+        validate_bench_serve,
+    )
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="serve_fed_ckpt_")
+    g, fed, state = train_and_checkpoint(args, ckpt_dir)
+
+    model = ServedModel.restore(ckpt_dir, g, fed, backend=args.backend,
+                                warm=args.warm, seed=args.seed)
+    engine = QueryEngine(model, cache_policy=args.policy)
+    n_traces = engine.warmup()
+    print(f"# restored step {model.restored_step}; warmup compiled "
+          f"{n_traces} programs over buckets {engine.buckets}")
+
+    if args.parity_check:
+        parity_check(model, engine, g, fed, state, args.seed)
+        # parity queries ran through the warmed buckets: must not retrace
+        if engine.trace_count != engine.trace_count_after_warmup:
+            raise AssertionError("parity check retraced a serve shape")
+
+    mix = ({"historical": 0.9, "fresh": 0.1} if args.policy == "historical"
+           else {"fresh": 0.9, "historical": 0.1})
+    gen = LoadGenerator(engine, seed=args.seed, n_queries=args.queries,
+                        n_updates=args.updates, mode=args.mode,
+                        rate=args.rate, concurrency=args.concurrency,
+                        policy_mix=mix)
+    ledger = gen.run()
+
+    retraced = engine.trace_count - engine.trace_count_after_warmup
+    if retraced:
+        raise AssertionError(
+            f"{retraced} serve recompiles after warmup — bucket shapes leaked")
+
+    payload = ledger.summary(backend=args.backend, devices=jax.device_count(),
+                             quick=bool(args.quick), mode=args.mode,
+                             policy_mix=mix, model_summary=model.summary())
+    problems = validate_bench_serve(payload)
+    if problems:
+        raise SystemExit("refusing to write invalid BENCH_serve.json:\n  "
+                         + "\n  ".join(problems))
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {args.out}")
+    print(f"# {payload['n_queries']} queries / {payload['n_updates']} updates "
+          f"({args.mode}-loop): {payload['queries_per_s']:.1f} q/s, "
+          f"p50={payload['p50_ms']:.2f}ms p99={payload['p99_ms']:.2f}ms, "
+          f"occupancy={payload['batch_occupancy']:.2f}, "
+          f"hit_rate={payload['cache_hit_rate']:.3f}")
+    return payload
+
+
+def main(argv=None) -> int:
+    args = build_args(argv)
+    run_pipeline(args)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

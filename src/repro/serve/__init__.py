@@ -1,0 +1,44 @@
+"""repro.serve: checkpoint-backed online inference for the federated GCN.
+
+``ServedModel`` restores a ``save_federation`` checkpoint (params + the
+(K, n_tot, H1) historical tables) into a device-resident warm embedding
+cache; ``QueryEngine`` answers micro-batched node-classification queries
+over it at pre-jitted bucket shapes; ``GraphStore`` absorbs streaming graph
+updates with exact 1-hop cache invalidation; ``LoadGenerator`` drives the
+stack with seeded synthetic traffic and emits the schema-guarded
+``BENCH_serve.json`` latency ledger. Entry point: ``launch/serve_fed.py``.
+"""
+from repro.serve.engine import CACHE_POLICIES, DEFAULT_BUCKETS, QueryEngine
+from repro.serve.loadgen import (
+    LOAD_MODES,
+    LatencyLedger,
+    LoadGenerator,
+    validate_bench_serve,
+)
+from repro.serve.model import (
+    SERVE_BACKENDS,
+    WARM_MODES,
+    ServedModel,
+    federation_template,
+    federation_tree,
+    save_federation,
+)
+from repro.serve.updates import CapacityError, GraphStore
+
+__all__ = [
+    "CACHE_POLICIES",
+    "DEFAULT_BUCKETS",
+    "LOAD_MODES",
+    "SERVE_BACKENDS",
+    "WARM_MODES",
+    "CapacityError",
+    "GraphStore",
+    "LatencyLedger",
+    "LoadGenerator",
+    "QueryEngine",
+    "ServedModel",
+    "federation_template",
+    "federation_tree",
+    "save_federation",
+    "validate_bench_serve",
+]

@@ -1,0 +1,252 @@
+"""ServedModel: the checkpoint-backed inference face of a trained federation.
+
+The paper's core artifact — historical layer-1 embedding tables synchronized
+cheaply across clients — is exactly a warm inference cache. ``ServedModel``
+restores the federation checkpoint (params + the (K, n_tot, H1) tables,
+written by ``save_federation``) and turns it into a *global-graph* serving
+state:
+
+* ``params`` — the aggregated GCN weights;
+* a device-resident warm layer-1 embedding cache ``h1`` (capacity, H1),
+  initialised either by one full layer-0 pass over the graph
+  (``warm="refresh"``, the serving-parity basis: rows are bit-identical to
+  the training-side eval path) or by scattering the checkpointed per-client
+  ``hist1`` rows into global node ids (``warm="tables"``, the paper's
+  cheap-but-stale start);
+* per-row freshness bookkeeping: ``valid`` (invalidated by streaming graph
+  updates until re-embedded), ``cache_age`` (serve steps since the row was
+  last written), and ``table_age`` (the checkpointed training-time staleness
+  counters, scattered to global ids — the paper's Eq. 6 diagnostics carried
+  into serving).
+
+Queries run through ``repro.serve.engine.QueryEngine``; streaming updates
+mutate the underlying ``repro.serve.updates.GraphStore``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, load_latest, save_checkpoint
+from repro.graph.csr import build_padded_neighbors, csr_from_padded
+from repro.models.gcn import HIDDEN, _sage_layer, gcn_init, neighbor_aggregate
+from repro.serve.updates import GraphStore
+
+SERVE_BACKENDS = ("gather", "segment", "spmm")
+WARM_MODES = ("refresh", "tables", "cold")
+
+
+# ---------------------------------------------------------------------------
+# federation checkpoint layout
+# ---------------------------------------------------------------------------
+
+def federation_tree(state: Any) -> dict:
+    """The canonical checkpoint pytree of a federation: global params plus
+    the synchronized table state. Accepts a ``repro.api.EngineState`` (or
+    anything with ``.params/.hist/.ghost_feat/.prev_loss``) or an
+    already-flat dict with these keys."""
+    if hasattr(state, "hist"):
+        return {
+            "params": state.params,
+            "hist1": state.hist.hist1,
+            "age": state.hist.age,
+            "ghost_feat": state.ghost_feat,
+            "prev_loss": state.prev_loss,
+        }
+    return dict(state)
+
+
+def federation_template(fed) -> dict:
+    """Shape/dtype template for ``load_checkpoint`` built from the
+    partition's static geometry (no training state needed)."""
+    n_tot = fed.n_max + fed.g_max
+    return {
+        "params": gcn_init(jax.random.PRNGKey(0), fed.n_features, fed.n_classes),
+        "hist1": jnp.zeros((fed.n_clients, n_tot, HIDDEN[0]), jnp.float32),
+        "age": jnp.zeros((fed.n_clients, n_tot), jnp.int32),
+        "ghost_feat": jnp.zeros((fed.n_clients, fed.g_max, fed.n_features),
+                                jnp.float32),
+        "prev_loss": jnp.zeros((fed.n_clients, fed.n_max), jnp.float32),
+    }
+
+
+def save_federation(directory: str, step: int, state: Any) -> str:
+    """Checkpoint a trained federation (params + tables) for serving."""
+    return save_checkpoint(directory, step, federation_tree(state))
+
+
+# ---------------------------------------------------------------------------
+# layer-1 embedding compute (the cache fill / refresh kernel)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _layer1_full(params, features, nbr_idx, nbr_mask, csr=None, adj=None,
+                 backend: str = "segment"):
+    """Layer-1 embeddings for every row — exactly the first layer of
+    ``gcn_full_forward`` (same backend, same operands), so cache rows are
+    bit-identical to the training-side eval path."""
+    agg = neighbor_aggregate(features, nbr_idx, nbr_mask, backend=backend,
+                             csr=csr, adj=adj)
+    return _sage_layer(params, 0, features, agg)
+
+
+def _scatter_tables(fed, table_k, fill=0.0):
+    """Scatter a per-client (K, n_max[, d]) own-row table into global node
+    order (every global node belongs to exactly one client)."""
+    own = np.asarray(fed.node_mask) > 0                      # (K, n_max)
+    gids = np.asarray(fed.global_ids)[own]
+    vals = np.asarray(table_k)[:, : fed.n_max][own]
+    n = int(own.sum())
+    out = np.full((n,) + vals.shape[1:], fill, vals.dtype)
+    out[gids] = vals
+    return out
+
+
+class ServedModel:
+    """Device-resident serving state: params + warm embedding cache.
+
+    Built via :meth:`restore` (from a ``save_federation`` checkpoint) or
+    directly from params + a :class:`GraphStore` for tests.
+    """
+
+    def __init__(self, params, store: GraphStore, *, backend: str = "segment",
+                 warm: str = "refresh", table_h1: np.ndarray | None = None,
+                 table_age: np.ndarray | None = None,
+                 restored_step: int | None = None):
+        if backend not in SERVE_BACKENDS:
+            raise ValueError(f"unknown serve backend {backend!r}; "
+                             f"known: {SERVE_BACKENDS}")
+        if warm not in WARM_MODES:
+            raise ValueError(f"unknown warm mode {warm!r}; known: {WARM_MODES}")
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.store = store
+        self.backend = backend
+        self.warm = warm
+        self.restored_step = restored_step
+        cap = store.capacity
+        self.feat = jnp.asarray(store.features)              # (cap, F) device
+        self.valid = np.zeros(cap, bool)
+        self.step = 0                                        # serve-step clock
+        self.row_version = np.zeros(cap, np.int64)           # step of last write
+        # training-time staleness of the checkpointed tables, global order
+        self.table_age = table_age
+        self.n_invalidated = 0
+        self.n_refreshed = 0
+
+        if warm == "refresh":
+            self.h1 = self.compute_layer1_full()
+            self.valid[: store.n_active] = True
+        elif warm == "tables":
+            if table_h1 is None:
+                raise ValueError("warm='tables' needs the scattered table_h1")
+            h = np.zeros((cap, HIDDEN[0]), np.float32)
+            h[: len(table_h1)] = table_h1
+            self.h1 = jnp.asarray(h)
+            self.valid[: store.n_active] = True
+        else:                                                # cold
+            self.h1 = jnp.zeros((cap, HIDDEN[0]), jnp.float32)
+
+    # -- construction ----------------------------------------------------
+
+    @classmethod
+    def restore(cls, directory: str, graph, fed, *, step: int | None = None,
+                backend: str = "segment", warm: str = "refresh",
+                capacity: int | None = None, seed: int = 0,
+                headroom: float = 0.25) -> "ServedModel":
+        """Load a federation checkpoint and build the serving state.
+
+        ``seed`` must match the training engine's seed so the padded
+        neighbor arrays equal the training eval graph's (bit-parity).
+        ``step=None`` auto-picks the newest checkpoint (``load_latest``).
+        """
+        template = federation_template(fed)
+        if step is None:
+            step, tree = load_latest(directory, template)
+        else:
+            tree = load_checkpoint(directory, step, template)
+        idx, mask = build_padded_neighbors(graph.adjacency_lists(),
+                                           fed.max_deg, seed=seed)
+        store = GraphStore(graph.features, idx, mask, capacity=capacity,
+                           seed=seed, headroom=headroom)
+        table_h1 = _scatter_tables(fed, tree["hist1"])
+        table_age = _scatter_tables(fed, tree["age"]).astype(np.int64)
+        return cls(tree["params"], store, backend=backend, warm=warm,
+                   table_h1=table_h1, table_age=table_age, restored_step=step)
+
+    # -- cache compute / bookkeeping -------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return self.store.n_active
+
+    @property
+    def cache_age(self) -> np.ndarray:
+        """Serve steps since each row was last written (active rows)."""
+        return (self.step - self.row_version)[: self.n_active]
+
+    def aggregation_operands(self, nbr_idx: np.ndarray,
+                             nbr_mask: np.ndarray) -> dict:
+        """Backend-specific static operands for ``neighbor_aggregate`` over
+        the given padded rows (CSR edge arrays / dense adjacency)."""
+        if self.backend == "segment":
+            c = csr_from_padded(nbr_idx, nbr_mask)
+            return {"csr": {k: jnp.asarray(v) for k, v in c.items()}}
+        if self.backend == "spmm":
+            from repro.kernels.spmm.ops import adjacency_from_neighbors
+
+            return {"adj": adjacency_from_neighbors(
+                jnp.asarray(nbr_idx), jnp.asarray(nbr_mask), self.store.capacity)}
+        return {}
+
+    def compute_layer1_full(self) -> jnp.ndarray:
+        """One full layer-0 pass over the (capacity-padded) graph — the warm
+        cache fill. Rows < n_active are bit-identical to the eval path's
+        internal h1 (same backend, same padded-neighbor operands)."""
+        s = self.store
+        kw = self.aggregation_operands(s.nbr_idx, s.nbr_mask)
+        return _layer1_full(self.params, self.feat, jnp.asarray(s.nbr_idx),
+                            jnp.asarray(s.nbr_mask), backend=self.backend, **kw)
+
+    def invalidate(self, rows: np.ndarray) -> int:
+        rows = np.asarray(rows, np.int64)
+        n_new = int(self.valid[rows].sum())
+        self.valid[rows] = False
+        self.n_invalidated += len(rows)
+        return n_new
+
+    def mark_written(self, rows: np.ndarray) -> None:
+        self.valid[rows] = True
+        self.row_version[rows] = self.step
+        self.n_refreshed += len(rows)
+
+    def set_features(self, rows: np.ndarray, feats: np.ndarray) -> None:
+        """Mirror a GraphStore feature write into the device copy."""
+        self.feat = self.feat.at[jnp.asarray(rows)].set(
+            jnp.asarray(feats, jnp.float32))
+
+    def invalid_rows(self) -> np.ndarray:
+        return np.flatnonzero(~self.valid[: self.n_active])
+
+    def summary(self) -> dict:
+        age = self.cache_age
+        out = {
+            "n_active": self.n_active,
+            "capacity": self.store.capacity,
+            "restored_step": self.restored_step,
+            "backend": self.backend,
+            "warm": self.warm,
+            "valid_frac": float(self.valid[: self.n_active].mean())
+            if self.n_active else 1.0,
+            "cache_age_mean": float(age.mean()) if len(age) else 0.0,
+            "cache_age_max": int(age.max()) if len(age) else 0,
+            "rows_invalidated": self.n_invalidated,
+            "rows_refreshed": self.n_refreshed,
+        }
+        if self.table_age is not None:
+            out["table_age_mean"] = float(self.table_age.mean())
+            out["table_age_max"] = int(self.table_age.max())
+        return out

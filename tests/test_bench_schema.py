@@ -115,3 +115,106 @@ def test_validator_is_pure():
     snapshot = copy.deepcopy(p)
     validate_bench_round(p)
     assert p == snapshot
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json schema guard (repro.serve.loadgen.validate_bench_serve)
+# ---------------------------------------------------------------------------
+
+from repro.serve import validate_bench_serve  # noqa: E402
+
+
+def good_serve_payload():
+    return {
+        "bench": "serve_latency",
+        "backend": "segment",
+        "devices": 1,
+        "quick": True,
+        "mode": "open",
+        "policy_mix": {"historical": 0.9, "fresh": 0.1},
+        "n_queries": 10,
+        "n_updates": 2,
+        "queries_per_s": 120.0,
+        "p50_ms": 1.5,
+        "p99_ms": 9.0,
+        "batch_occupancy": 0.6,
+        "cache_hit_rate": 0.97,
+        "invalidation_rate": 0.05,
+        "rows_invalidated": 4,
+        "rows_refreshed": 4,
+        "buckets": [
+            {"bucket": 8, "n": 7, "p50_ms": 1.2, "p99_ms": 3.0},
+            {"bucket": 32, "n": 3, "p50_ms": 4.0, "p99_ms": 9.0},
+        ],
+    }
+
+
+def test_good_serve_payload_validates():
+    assert validate_bench_serve(good_serve_payload()) == []
+
+
+def test_checked_in_serve_bench_validates():
+    path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    if not os.path.exists(path):
+        import pytest
+        pytest.skip("no BENCH_serve.json checked in")
+    with open(path) as f:
+        assert validate_bench_serve(json.load(f)) == []
+
+
+def test_serve_missing_keys_and_types():
+    assert validate_bench_serve("nope") != []
+    for key in ("bench", "mode", "policy_mix", "n_queries", "queries_per_s",
+                "p50_ms", "cache_hit_rate", "buckets"):
+        p = good_serve_payload()
+        del p[key]
+        assert any(key in e for e in validate_bench_serve(p)), key
+    p = good_serve_payload()
+    p["bench"] = "round_throughput"
+    assert any("bench" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["mode"] = "sideways"
+    assert any("mode" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["policy_mix"] = {"psychic": 1.0}
+    assert any("policy_mix" in e for e in validate_bench_serve(p))
+
+
+def test_serve_percentiles_and_rates():
+    p = good_serve_payload()
+    p["p99_ms"] = 0.1                       # below p50: impossible
+    assert any("p99_ms" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["queries_per_s"] = 0.0
+    assert any("queries_per_s" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["cache_hit_rate"] = 1.2
+    assert any("cache_hit_rate" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["batch_occupancy"] = 0.0              # served queries imply occupancy
+    assert any("batch_occupancy" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["rows_refreshed"] = -1
+    assert any("rows_refreshed" in e for e in validate_bench_serve(p))
+
+
+def test_serve_bucket_rows_must_account_for_all_queries():
+    p = good_serve_payload()
+    p["buckets"][1]["n"] = 2                # 7 + 2 != 10
+    assert any("account" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["buckets"] = []
+    assert any("buckets" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    del p["buckets"][0]["p50_ms"]
+    assert any("buckets[0]" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["buckets"][0]["p99_ms"] = 0.5         # below its p50
+    assert any("buckets[0]" in e for e in validate_bench_serve(p))
+
+
+def test_serve_validator_is_pure():
+    p = good_serve_payload()
+    snapshot = copy.deepcopy(p)
+    validate_bench_serve(p)
+    assert p == snapshot

@@ -1,0 +1,349 @@
+"""repro.serve: checkpoint-backed online inference.
+
+Pins the subsystem's contracts:
+
+* **checkpoint round-trip parity** — a trained federation saved with
+  ``save_federation`` and restored into a ``ServedModel`` serves logits
+  bit-identical to the training-side eval path (``build_eval_graph`` ->
+  ``_eval_logits``) under ``cache_policy="historical"``;
+* **no recompiles after warmup** — any query mix after ``warmup()`` reuses
+  the pre-jitted bucket shapes (``trace_count`` probe);
+* **exact 1-hop invalidation** — streaming updates dirty precisely the
+  mutated rows' layer-1 cache entries, and a background refresh restores
+  historical/fresh agreement bit-for-bit;
+* the checkpoint-layer satellites (atomic tmp cleanup, writable loaded
+  arrays, ``load_latest``).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    latest_step,
+    load_checkpoint,
+    load_latest,
+    save_checkpoint,
+)
+from repro.serve import (
+    CapacityError,
+    GraphStore,
+    QueryEngine,
+    ServedModel,
+    save_federation,
+)
+
+TRAIN_ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    """A small trained + checkpointed federation: (graph, fed, state, dir)."""
+    from repro.api import FedEngine, method_config
+    from repro.federated.partition import partition_graph
+    from repro.graph.data import make_dataset
+
+    g = make_dataset("pubmed", scale=32, seed=0)
+    fed = partition_graph(g, 4, alpha=0.5, seed=0)
+    engine = FedEngine(g, fed, method_config("fedais", tau0=2),
+                       rounds=TRAIN_ROUNDS, clients_per_round=2, seed=0,
+                       eval_every=TRAIN_ROUNDS)
+    state = engine.init_state()
+    engine.run(state)
+    ckpt_dir = str(tmp_path_factory.mktemp("fed_ckpt"))
+    save_federation(ckpt_dir, TRAIN_ROUNDS, state)
+    return g, fed, state, ckpt_dir
+
+
+def restore_engine(trained, backend="segment", warm="refresh", **kw):
+    g, fed, _, ckpt_dir = trained
+    model = ServedModel.restore(ckpt_dir, g, fed, backend=backend, warm=warm,
+                                seed=0)
+    return model, QueryEngine(model, **kw)
+
+
+def eval_logits_reference(trained, backend):
+    """The training-side eval path the served logits must match bitwise."""
+    from repro.federated.server import _eval_logits, build_eval_graph
+
+    g, fed, state, _ = trained
+    eg = build_eval_graph(g, max_deg=fed.max_deg, seed=0, backend=backend)
+    return np.asarray(_eval_logits(
+        state.params, eg["features"], eg["nbr_idx"], eg["nbr_mask"],
+        csr=eg.get("csr"), adj=eg.get("adj"), backend=backend))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant: checkpoint round-trip bit-parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["segment", "gather"])
+def test_roundtrip_served_logits_bit_identical(trained, backend):
+    g = trained[0]
+    model, engine = restore_engine(trained, backend=backend)
+    engine.warmup()
+    want = eval_logits_reference(trained, backend)
+    n = g.features.shape[0]
+    for policy in ("historical", "fresh"):
+        got = np.concatenate([
+            engine.query(np.arange(i, min(i + 100, n)), policy=policy)
+            for i in range(0, n, 100)])
+        assert got.shape == want.shape
+        assert np.array_equal(got, want), \
+            f"{backend}/{policy}: served logits differ from eval path"
+    assert model.restored_step == TRAIN_ROUNDS
+
+
+def test_restore_autopicks_latest_step(trained):
+    g, fed, state, ckpt_dir = trained
+    model = ServedModel.restore(ckpt_dir, g, fed, seed=0)
+    assert model.restored_step == latest_step(ckpt_dir) == TRAIN_ROUNDS
+    # the training-time staleness diagnostics ride along, in global order
+    assert model.table_age is not None
+    assert model.table_age.shape == (g.features.shape[0],)
+    s = model.summary()
+    assert s["valid_frac"] == 1.0 and s["restored_step"] == TRAIN_ROUNDS
+
+
+def test_warm_tables_uses_checkpointed_rows(trained):
+    from repro.serve.model import _scatter_tables
+
+    g, fed, state, ckpt_dir = trained
+    model = ServedModel.restore(ckpt_dir, g, fed, warm="tables", seed=0)
+    want = _scatter_tables(fed, state.hist.hist1)
+    n = g.features.shape[0]
+    assert np.array_equal(np.asarray(model.h1)[:n], want)
+    assert model.valid[:n].all()
+
+
+# ---------------------------------------------------------------------------
+# no recompiles after warmup (the jit-stable micro-batching contract)
+# ---------------------------------------------------------------------------
+
+def test_no_recompile_after_warmup(trained):
+    model, engine = restore_engine(trained)
+    baseline = engine.warmup()
+    assert baseline == engine.trace_count_after_warmup > 0
+    rng = np.random.default_rng(0)
+    n = model.n_active
+    for size in (1, 3, 8, 9, 32, 77, 128, 129, 300):
+        for policy in ("historical", "fresh"):
+            engine.query(rng.integers(0, n, size=size), policy=policy)
+    # multi-request packing + updates + refresh ride the same shapes
+    engine.serve_batch([rng.integers(0, n, size=s) for s in (2, 5, 40)])
+    engine.add_edges([(0, 1)])
+    engine.refresh()
+    assert engine.trace_count == baseline, \
+        f"{engine.trace_count - baseline} recompiles after warmup"
+
+
+def test_batch_packing_returns_per_request_logits(trained):
+    model, engine = restore_engine(trained)
+    reqs = [[5], [1, 2, 3], np.arange(20)]
+    outs, info = engine.serve_batch(reqs)
+    assert [len(o) for o in outs] == [1, 3, 20]
+    singles = [engine.query(r) for r in reqs]
+    for got, want in zip(outs, singles):
+        assert np.array_equal(got, want)
+    assert 0 < info["occupancy"] <= 1
+    assert info["hit_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# streaming updates: exact 1-hop invalidation + refresh exactness
+# ---------------------------------------------------------------------------
+
+def pick_nonadjacent(store, lo=0):
+    """Two live nodes with free slots that are not already neighbors."""
+    deg = store.degrees()
+    for u in range(lo, store.n_active):
+        for v in range(u + 1, store.n_active):
+            if deg[u] < store.max_deg and deg[v] < store.max_deg \
+                    and v not in store.nbr_idx[u][store.nbr_mask[u] > 0]:
+                return u, v
+    pytest.skip("graph too dense for a free edge slot")
+
+
+def test_add_edges_invalidates_exactly_endpoints(trained):
+    model, engine = restore_engine(trained)
+    u, v = pick_nonadjacent(model.store)
+    affected = engine.add_edges([(u, v)])
+    assert sorted(affected) == sorted({u, v})
+    assert set(model.invalid_rows()) == {u, v}
+    # every other cached row is untouched
+    mask = np.ones(model.n_active, bool)
+    mask[[u, v]] = False
+    assert model.valid[: model.n_active][mask].all()
+
+
+def test_add_nodes_invalidates_one_hop(trained):
+    model, engine = restore_engine(trained)
+    anchors = [0, 3]
+    feats = model.store.features[anchors] * 0.5
+    new_id = model.n_active
+    ids, affected = engine.add_nodes(feats[:1], [(new_id, a) for a in anchors])
+    assert list(ids) == [new_id]
+    assert sorted(affected) == sorted({new_id, *anchors})
+    assert set(model.invalid_rows()) == {new_id, *anchors}
+    # the new node is servable immediately (stale rows serve as-is)
+    logits = engine.query([new_id], policy="fresh")
+    assert np.isfinite(logits).all()
+
+
+def test_refresh_restores_fresh_historical_agreement(trained):
+    model, engine = restore_engine(trained)
+    u, v = pick_nonadjacent(model.store)
+    engine.add_edges([(u, v)])
+    q = np.array([u, v])
+    stale = engine.query(q, policy="historical")
+    fresh = engine.query(q, policy="fresh")
+    # the mutated rows' historical cache is stale until refreshed
+    assert not np.array_equal(stale, fresh)
+    n = engine.refresh()
+    assert n == 2 and len(model.invalid_rows()) == 0
+    assert np.array_equal(engine.query(q, policy="historical"), fresh)
+    # hit-rate ledger saw the staleness window
+    assert model.n_invalidated == 2 and model.n_refreshed >= 2
+
+
+def test_fresh_policy_ignores_staleness_of_neighbors(trained):
+    """'fresh' re-embeds the whole 1-hop neighborhood, so it is exact even
+    when the cache rows it overlays are stale."""
+    model, engine = restore_engine(trained)
+    u, v = pick_nonadjacent(model.store)
+    engine.add_edges([(u, v)])
+    before = engine.query([u], policy="fresh")
+    engine.refresh()
+    assert np.array_equal(engine.query([u], policy="fresh"), before)
+
+
+def test_query_validation(trained):
+    model, engine = restore_engine(trained)
+    with pytest.raises(ValueError, match="outside"):
+        engine.query([model.n_active + 10])
+    with pytest.raises(ValueError, match="cache_policy"):
+        engine.query([0], policy="psychic")
+    with pytest.raises(ValueError, match="cache_policy"):
+        QueryEngine(model, cache_policy="nope")
+    with pytest.raises(ValueError, match="backend"):
+        ServedModel({}, model.store, backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# GraphStore (host-side mutable adjacency)
+# ---------------------------------------------------------------------------
+
+def make_store(n=6, d=3, f=4, **kw):
+    idx = np.zeros((n, d), np.int32)
+    mask = np.zeros((n, d), np.float32)
+    feats = np.arange(n * f, dtype=np.float32).reshape(n, f)
+    return GraphStore(feats, idx, mask, **kw)
+
+
+def test_store_capacity_and_headroom():
+    s = make_store(n=6, capacity=8)
+    assert s.capacity == 8
+    s.add_nodes(np.zeros((2, 4)))
+    with pytest.raises(CapacityError, match="full"):
+        s.add_nodes(np.zeros((1, 4)))
+    with pytest.raises(ValueError, match="capacity"):
+        make_store(n=6, capacity=3)
+    assert make_store(n=100).capacity >= 164      # default headroom floor
+
+
+def test_store_edge_semantics():
+    s = make_store(n=4, d=2)
+    assert list(s.add_edges([(0, 1)])) == [0, 1]
+    assert list(s.add_edges([(0, 1), (1, 0)])) == []      # dup: no-op
+    assert list(s.add_edges([(2, 2)])) == []              # self-loop ignored
+    assert s.n_edges_added == 1
+    s.add_edges([(0, 2), (0, 3)])                         # row 0 now full
+    assert s.n_edges_evicted == 1                         # random slot replaced
+    assert s.degrees([0])[0] == 2                         # degree stays capped
+    with pytest.raises(ValueError, match="outside"):
+        s.add_edges([(0, 99)])
+
+
+def test_store_add_nodes_with_attachment_edges():
+    s = make_store(n=3, d=2, capacity=6)
+    ids, affected = s.add_nodes(np.ones((2, 4)), edges=[(3, 0), (4, 3)])
+    assert list(ids) == [3, 4]
+    assert sorted(affected) == [0, 3, 4]
+    assert s.n_active == 5
+    assert s.degrees([3])[0] == 2                         # edges to 0 and 4
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-layer satellites
+# ---------------------------------------------------------------------------
+
+def test_failed_save_leaves_no_tmp(tmp_path, monkeypatch):
+    import msgpack
+
+    def boom(*a, **kw):
+        raise RuntimeError("disk on fire")
+
+    monkeypatch.setattr(msgpack, "packb", boom)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        save_checkpoint(str(tmp_path), 1, {"x": np.zeros(3)})
+    assert os.listdir(tmp_path) == []         # no stray .tmp, no partial ckpt
+
+
+def test_load_latest_picks_newest(tmp_path):
+    like = {"x": np.zeros(3, np.float32)}
+    with pytest.raises(FileNotFoundError):
+        load_latest(str(tmp_path), like)
+    save_checkpoint(str(tmp_path), 2, {"x": np.full(3, 2.0, np.float32)})
+    save_checkpoint(str(tmp_path), 10, {"x": np.full(3, 10.0, np.float32)})
+    step, tree = load_latest(str(tmp_path), like)
+    assert step == 10
+    assert np.array_equal(np.asarray(tree["x"]), np.full(3, 10.0))
+
+
+def test_loaded_arrays_are_writable(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": np.arange(4, dtype=np.float32)})
+    tree = load_checkpoint(str(tmp_path), 0, {"x": np.zeros(4, np.float32)})
+    host = np.asarray(tree["x"]).copy()
+    host[0] = -1.0                                        # plain numpy path
+    buf = np.frombuffer(b"\x00" * 16, np.float32)
+    assert not buf.flags.writeable                        # the hazard guarded
+
+
+# ---------------------------------------------------------------------------
+# load generator + latency ledger
+# ---------------------------------------------------------------------------
+
+def test_loadgen_emits_schema_valid_payload(trained):
+    from repro.serve import LoadGenerator, validate_bench_serve
+
+    model, engine = restore_engine(trained)
+    gen = LoadGenerator(engine, seed=0, n_queries=16, n_updates=2,
+                        mode="closed", concurrency=4, refresh_every=2)
+    ledger = gen.run()                         # warms up the engine itself
+    payload = ledger.summary(backend=model.backend, devices=1, quick=True,
+                             mode="closed", policy_mix=gen.policy_mix,
+                             model_summary=model.summary())
+    assert validate_bench_serve(payload) == []
+    assert payload["n_queries"] == 16 and payload["n_updates"] == 2
+    assert sum(b["n"] for b in payload["buckets"]) == 16
+
+    # open-loop discipline over the already-warm engine: queueing delay
+    # makes latency >= service time, and the ledger still validates
+    gen2 = LoadGenerator(engine, seed=1, n_queries=12, n_updates=3,
+                        mode="open", rate=2000.0)
+    payload2 = gen2.run().summary(backend=model.backend, devices=1,
+                                  quick=True, mode="open",
+                                  policy_mix=gen2.policy_mix)
+    assert validate_bench_serve(payload2) == []
+    # traffic ran entirely through the warmed bucket shapes
+    assert engine.trace_count == engine.trace_count_after_warmup
+
+
+def test_loadgen_validations(trained):
+    from repro.serve import LoadGenerator
+
+    model, engine = restore_engine(trained)
+    with pytest.raises(ValueError, match="mode"):
+        LoadGenerator(engine, mode="diagonal")
+    with pytest.raises(ValueError, match="policy_mix"):
+        LoadGenerator(engine, policy_mix={"psychic": 1.0})
