@@ -38,16 +38,23 @@ unsharded fused run (see ``FedEngine.sharded_eligibility`` and
 tests/test_sharding.py; fp32 all-reduce reassociation forfeits bit-parity).
 
 On a 2-D ``("pods", "clients")`` mesh with ``table_sharding`` allowing it,
-the historical tables themselves shard their K axis over the pod axis
+EVERY K-sized array shards its K axis over the pod axis
 (``repro.sharding.tables.build_pod_sharded_chunk``): each pod owns its
-resident clients' hist1/age/ghost_feat/prev_loss rows, the cross-client
-ghost pull becomes a partition-time-bucketed ``all_to_all`` keyed by
-``ghost_owner``, and the write-back shrinks to a cohort all-gather plus
-pod-local scatter — per-device table memory and sync traffic stop scaling
-with K (see ``FedEngine.pod_sharded_eligibility``, the soft fallback chain
-pod-sharded -> client-sharded -> fused -> stepwise, and
-tests/test_pod_sharding.py). ``merge_reduce="pairwise"`` swaps the merge's
-psum for a deterministic fp32 binary-tree over gathered partial sums.
+resident clients' hist1/age/ghost_feat/prev_loss rows AND their static
+arrays (features/adjacency/labels/masks, cached as pod shards once per
+engine together with the bucketed-exchange-built ghost-source feature
+table), the cohort's rows are fetched from owner pods per round, the
+cross-client ghost pull is a partition-time-bucketed ``all_to_all`` keyed
+by ``ghost_owner`` and gated per round on the host-derived tau-sync
+predicate (non-sync rounds skip it entirely), and the write-back is a
+host-routed cohort-keyed bucket exchange (only touched rows reach their
+owner pod) — no per-device resident or per-round collective scales with K
+(see ``FedEngine.pod_sharded_eligibility``, the soft fallback chain
+pod-sharded -> client-sharded -> fused -> stepwise,
+tests/test_pod_sharding.py, and the ``launch/fed_dryrun.py --pods`` byte
+ledger). ``merge_reduce="pairwise"`` swaps the merges' psum for a
+deterministic fp32 binary-tree over gathered partial sums on BOTH mesh
+kinds (1-D client and 2-D pod).
 
 ``repro.federated.simulator.run_federated`` is a thin compatibility shim
 over ``FedEngine(...).run()`` and is proven history-identical to the legacy
@@ -84,7 +91,12 @@ from repro.api.registry import (
 from repro.core.fedais import MethodConfig, batch_size_for, make_vmapped_update
 from repro.core.historical import init_historical
 from repro.federated.costs import CostMeter, DelayModel
-from repro.federated.partition import FederatedGraph, ghost_exchange_buckets
+from repro.federated.partition import (
+    FederatedGraph,
+    exchange_ghost_features,
+    ghost_exchange_buckets,
+    writeback_routing,
+)
 from repro.federated.server import build_eval_graph, evaluate_global
 from repro.graph.data import GraphData
 from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_init, gcn_param_count
@@ -95,10 +107,12 @@ from repro.sharding.fed import (
     replicate_to_mesh,
 )
 from repro.sharding.tables import (
+    POD_ARRAY_KEYS,
     build_pod_sharded_chunk,
     pad_tables_to_pods,
     pod_axes_of,
     shard_tables_to_mesh,
+    sync_round_gates,
 )
 
 _CLIENT_ARRAY_KEYS = (
@@ -300,6 +314,7 @@ class FedEngine:
         self._pod_chunk = None              # built lazily in pod-table mode
         self._pod_chunk_m = None
         self._ghost_buckets = None          # partition-time all-to-all plan
+        self._pod_static = None             # pod-sharded static arrays + gsrc
         self._sizes_f32 = jnp.asarray(fed.client_sizes, jnp.float32)
         self.eval_graph = build_eval_graph(graph, max_deg=fed.max_deg, seed=seed,
                                            backend=eval_backend)
@@ -576,7 +591,8 @@ class FedEngine:
         m = len(sels[0])
         if self._sharded_chunk is None or self._sharded_chunk_m != m:
             self._sharded_chunk = build_sharded_chunk(
-                self._vm_raw, mesh, axis, m, _LIGHT_STATS)
+                self._vm_raw, mesh, axis, m, _LIGHT_STATS,
+                reduce=self.merge_reduce)
             self._sharded_chunk_m = m
         pad = cohort_padding(m, mesh.shape[axis])
         sel_stack = np.stack(sels).astype(np.int32)
@@ -608,13 +624,32 @@ class FedEngine:
             return self.fed.client_sizes[sel_stack].astype(np.float32)
         return np.ones(sel_stack.shape, np.float32)
 
+    def _pod_static_arrays(self, buckets, n_pods: int):
+        """The pod-sharded STATIC residents, built once per engine (per pod
+        split): the client arrays the prefetched LocalUpdate reads
+        (``POD_ARRAY_KEYS`` — ghost_owner/ghost_row stay off the mesh)
+        padded to the pod grid and committed as ``P("pods")`` shards, plus
+        the (Kp, g_max, F) ghost-source feature table from the bucketed
+        owner exchange. Never written back — reused across chunks, so the
+        per-device resident cost is K/P rows for the life of the run."""
+        if self._pod_static is None:
+            statics = pad_tables_to_pods(
+                {k: jnp.asarray(getattr(self.fed, k))
+                 for k in POD_ARRAY_KEYS}, n_pods)
+            gsrc = jnp.asarray(
+                exchange_ghost_features(buckets, self.fed.features))
+            self._pod_static = shard_tables_to_mesh((statics, gsrc),
+                                                    self.mesh)
+        return self._pod_static
+
     def _call_pod_chunk(self, state: EngineState, sels, fans, eoffs):
-        """Run one chunk with the historical tables sharded over the pod
-        axis (repro.sharding.tables.build_pod_sharded_chunk): pad the K
-        axis to the pod grid, commit the four tables as pod shards and
-        everything else replicated, pad ragged cohorts with dummy clients
-        whose id is out of range of even the PADDED tables (fetches zero,
-        write-backs drop), and slice the tables back to K rows after."""
+        """Run one chunk with every K-sized array sharded over the pod axis
+        (repro.sharding.tables.build_pod_sharded_chunk): pad the K axis to
+        the pod grid, commit the four tables + static arrays as pod shards,
+        pad ragged cohorts with dummy clients whose id has no owner pod
+        (fetches zero, write-backs drop), route the cohort-keyed write-back
+        and the tau-sync gates on the host, and slice the tables back to K
+        rows after."""
         mesh = self.mesh
         n_pods = mesh.shape[self.pod_axes[0]]
         n_dev = mesh.devices.size
@@ -622,6 +657,7 @@ class FedEngine:
             self._ghost_buckets = ghost_exchange_buckets(
                 self.fed.ghost_owner, self.fed.ghost_row,
                 self.fed.ghost_mask, n_pods)
+            self._pod_static = None         # re-shard for the new pod split
         buckets = self._ghost_buckets
         m = len(sels[0])
         if self._pod_chunk is None or self._pod_chunk_m != m:
@@ -641,18 +677,26 @@ class FedEngine:
                                constant_values=buckets.n_clients_padded)
             fan_stack = np.pad(fan_stack, ((0, 0), (0, pad)), mode="edge")
             w_stack = np.pad(w_stack, ((0, 0), (0, pad)))
+        plan = writeback_routing(sel_stack, n_pods, n_dev // n_pods,
+                                 buckets.rows_per_pod)
+        gates = sync_round_gates(
+            eoffs, state.tau, self.mcfg.local_epochs,
+            enabled=self.mcfg.use_ghosts and not self.mcfg.use_generator)
+        arrays_sh, gsrc_sh = self._pod_static_arrays(buckets, n_pods)
         K = self.fed.n_clients
         tables = pad_tables_to_pods(
             (state.hist.hist1, state.hist.age, state.ghost_feat,
              state.prev_loss), n_pods)
         hist1, age, ghost_feat, prev_loss = shard_tables_to_mesh(tables, mesh)
-        state.params, state.key, state.arrays = replicate_to_mesh(
-            (state.params, state.key, state.arrays), mesh)
+        state.params, state.key = replicate_to_mesh(
+            (state.params, state.key), mesh)
         carry, light = self._pod_chunk(
             state.params, hist1, age, ghost_feat, prev_loss, state.key,
-            state.arrays, jnp.asarray(sel_stack), jnp.asarray(fan_stack),
-            jnp.asarray(w_stack), jnp.asarray(eoffs),
-            jnp.asarray(state.tau, jnp.int32))
+            arrays_sh, gsrc_sh, jnp.asarray(sel_stack),
+            jnp.asarray(fan_stack), jnp.asarray(w_stack), jnp.asarray(eoffs),
+            jnp.asarray(state.tau, jnp.int32), jnp.asarray(gates),
+            jnp.asarray(plan.dst), jnp.asarray(plan.pos),
+            jnp.asarray(plan.recv))
         if buckets.n_clients_padded == K:
             # divisible K: the carried tables come back pod-sharded and feed
             # the next chunk's (no-op) pad + device_put directly — shards

@@ -165,6 +165,142 @@ def simulate_ghost_exchange(buckets: GhostBuckets,
     return out
 
 
+def exchange_ghost_features(buckets: GhostBuckets,
+                            features: np.ndarray) -> np.ndarray:
+    """Bucketed owner exchange of the layer-0 ghost features (host, once per
+    partition): the same send/recv routing as the hist1 all-to-all applied
+    to the static (K, n_max, F) feature shards, so each pod fills its
+    residents' (g_max, F) ghost-source rows purely from received buckets —
+    no pod ever reads a replicated features array. Returns (Kp, g_max, F):
+    row [k, s] is ``features[ghost_owner[k, s], ghost_row[k, s]]`` for every
+    real ghost slot and 0 elsewhere (exactly the gf half of
+    ``core.historical.pull_ghosts``). Ghost sources are always owner OWN
+    rows (< n_max), so the hist-table routing indexes features directly."""
+    return simulate_ghost_exchange(buckets, features).astype(np.float32)
+
+
+@dataclass
+class WriteBackPlan:
+    """Host-built per-chunk routing for the cohort-keyed write-back exchange.
+
+    After a round, each device holds fresh table rows for its cohort slice;
+    the owner pods need them. The dense path all-gathers every cohort row to
+    every device (m rows each, K-independent but cohort-dense). This plan
+    shrinks it to a two-stage exchange sized by what each pod PAIR actually
+    routes: stage 1 all-gathers the cohort slice within a pod row (m/P
+    rows), stage 2 scatters those rows into per-destination-pod send
+    buckets and swaps them with one ``all_to_all`` over the pod axis
+    (``cap`` rows per pod pair, ``cap`` ≈ m/P² in expectation).
+
+    Built on the host per chunk from the selected cohorts alone (the
+    sel_stack is host-known before the chunk launches), baked in as scan
+    inputs. Shapes (S = rounds, m = padded cohort, P = pods):
+        dst (S, m)           owner pod of each cohort entry (P for dummies —
+                             the send-bucket scatter drops them)
+        pos (S, m)           slot within the (src pod, dst pod) send bucket
+        recv (S, P, P, cap)  recv[s, q, p, j]: destination-local table row
+                             of the j-th entry pod p sent pod q (sentinel
+                             ``rows_per_pod`` on unused slots — the table
+                             scatter drops them)
+
+    ``cap`` is the max (src, dst) bucket occupancy rounded up to a power of
+    two, so nearby cohort distributions reuse one compiled chunk shape.
+    Cohorts are assumed duplicate-free per round (sync selectors sample
+    without replacement), matching the dense path's scatter semantics.
+    """
+
+    n_pods: int
+    n_client_shards: int
+    rows_per_pod: int
+    cap: int
+    max_occupancy: int      # real max bucket fill before pow2 rounding
+    dst: np.ndarray
+    pos: np.ndarray
+    recv: np.ndarray
+
+
+def writeback_routing(sel_stack: np.ndarray, n_pods: int,
+                      n_client_shards: int, rows_per_pod: int,
+                      *, cap: int | None = None) -> WriteBackPlan:
+    """Route a chunk's (S, m) padded cohort ids into write-back buckets.
+
+    Cohort entry i of round s lives on device ``i // mL`` (mL = m/(P·C));
+    after the stage-1 intra-pod all-gather, pod row p holds cohort slice
+    ``[p·C·mL, (p+1)·C·mL)`` in device order — so the source pod of entry i
+    is ``i // (C·mL)``. The owner pod is ``sel // rows_per_pod``; ids >=
+    ``n_pods * rows_per_pod`` (cohort dummies) get the sentinel destination
+    ``n_pods``. Positions count up per (src, dst) pair in cohort order, so
+    the exchange is deterministic for a given sel_stack."""
+    sel_stack = np.asarray(sel_stack)
+    S, m = sel_stack.shape
+    n_dev = n_pods * n_client_shards
+    if m % n_dev:
+        raise ValueError(f"padded cohort {m} does not split over "
+                         f"{n_pods}x{n_client_shards} devices")
+    msl = m // n_pods                       # pod-row cohort slice
+    Kp = n_pods * rows_per_pod
+    dst = np.full((S, m), n_pods, np.int32)
+    pos = np.zeros((S, m), np.int32)
+    occ = np.zeros((S, n_pods, n_pods), np.int64)
+    src = np.arange(m) // msl
+    for s in range(S):
+        for i in range(m):
+            k = int(sel_stack[s, i])
+            if not 0 <= k < Kp:
+                continue                    # dummy: sentinel dst drops it
+            q = k // rows_per_pod
+            dst[s, i] = q
+            pos[s, i] = occ[s, src[i], q]
+            occ[s, src[i], q] += 1
+    max_occ = int(occ.max(initial=0))
+    need = max(1, max_occ)
+    if cap is None:
+        cap = 1 << (need - 1).bit_length()  # pow2: bounded retrace shapes
+    elif cap < need:
+        raise ValueError(f"cap {cap} < max bucket occupancy {need}")
+    recv = np.full((S, n_pods, n_pods, cap), rows_per_pod, np.int32)
+    for s in range(S):
+        for i in range(m):
+            q = int(dst[s, i])
+            if q >= n_pods:
+                continue
+            recv[s, q, src[i], pos[s, i]] = \
+                int(sel_stack[s, i]) - q * rows_per_pod
+    return WriteBackPlan(
+        n_pods=n_pods, n_client_shards=n_client_shards,
+        rows_per_pod=rows_per_pod, cap=int(cap), max_occupancy=max_occ,
+        dst=dst, pos=pos, recv=recv)
+
+
+def simulate_writeback_exchange(plan: WriteBackPlan, s: int,
+                                values: np.ndarray,
+                                table: np.ndarray) -> np.ndarray:
+    """Host-side (numpy) reference of round ``s``'s on-device write-back:
+    scatter the cohort's fresh rows into per-pod send buckets, swap them
+    all-to-all, and scatter each pod's received rows into its table shard.
+    ``values`` is the round's (m, ...) fresh rows in cohort order, ``table``
+    the (Kp, ...) padded table; returns the updated copy. The property
+    tests pin this bit-for-bit against the dense scatter
+    ``table[sel[i]] = values[i]`` for every real cohort id."""
+    P, rpp, cap = plan.n_pods, plan.rows_per_pod, plan.cap
+    m = values.shape[0]
+    sbuf = np.zeros((P, P, cap) + values.shape[1:], values.dtype)
+    src = np.arange(m) // (m // P)
+    for i in range(m):
+        q = int(plan.dst[s, i])
+        if q < P:
+            sbuf[src[i], q, plan.pos[s, i]] = values[i]
+    rbuf = np.swapaxes(sbuf, 0, 1)          # rbuf[q, p] = sbuf[p, q]
+    out = np.array(table)
+    for q in range(P):
+        for p in range(P):
+            for j in range(cap):
+                r = int(plan.recv[s, q, p, j])
+                if r < rpp:
+                    out[q * rpp + r] = rbuf[q, p, j]
+    return out
+
+
 @dataclass
 class FederatedGraph:
     """All K clients stacked on a leading axis (numpy; moved to jax later)."""

@@ -17,12 +17,22 @@ cases.
     PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh pod1 --pods 16
 
 ``--pods P`` lowers the pod-table mode instead (repro.sharding.tables): a
-``("pods", "clients")`` 2-D mesh whose table shards stay resident per pod,
-with the ghost exchange as a bucketed all-to-all — the report then carries
-a ``pods`` ledger (ghost-cut entries, all-to-all vs all-gather bytes, and
-the replicated-table byte count the sharding avoids). Sweep ``--clients``
-at a fixed ``--cohort`` to verify the write-back scales with the ghost
-cut, not with K.
+``("pods", "clients")`` 2-D mesh where EVERY K-sized array — historical
+tables AND static client arrays — stays resident as pod shards, the ghost
+exchange is a tau-gated bucketed all-to-all, and the write-back a
+host-routed cohort-keyed bucket exchange. The report then carries a
+``pods`` placement ledger classifying every per-device resident and
+per-round collective by what its bytes scale with: ``k_sharded`` (K/P),
+``replicated`` (K-independent), ``cohort_scaled`` (m), ``sync_gated``
+(ghost cut x the tau schedule's sync fraction; ZERO on non-sync rounds).
+``validate_fed_dryrun`` schema-guards the ledger before any write, and
+``--assert-k-flat K2`` lowers the chunk at two client counts and fails
+unless the replicated/cohort-scaled columns are byte-identical (the CI
+smoke proof that nothing scales with K):
+
+    PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh host \\
+        --force-devices 8 --pods 8 --clients 100000 --assert-k-flat 10000 \\
+        --cohort 64 --n-max 64 --g-max 8 --features 32
 
 Run as a script this forces fake XLA host devices (512 by default, so
 both pod chip counts fit on CPU); importing the module never touches
@@ -54,9 +64,16 @@ from repro.sharding.tables import (
     abstract_pod_chunk_args,
     build_pod_sharded_chunk,
     make_pod_mesh,
+    sync_round_gates,
 )
 from repro.utils.hlo import collective_stats
 from repro.utils.roofline import RooflineReport
+
+# abstract_pod_chunk_args' padded-adjacency width (the synthetic topology
+# has no real adjacency; the ledger's nbr_* rows use the same constant)
+DRYRUN_MAX_DEG = 16
+# horizon for probing the tau schedule's sync fraction
+SYNC_PROBE_ROUNDS = 64
 
 # chip counts come from the production mesh definition (launch/mesh.py)
 MESH_CHIPS = {
@@ -87,6 +104,191 @@ def synthetic_ghost_buckets(n_clients: int, n_max: int, g_max: int,
     return ghost_exchange_buckets(owner, row, mask, n_pods)
 
 
+def pod_placement_ledger(buckets, *, n_pods: int, cohort_pad: int,
+                         wb_cap: int, n_max: int, g_max: int, n_feat: int,
+                         n_classes: int, tau: int, local_epochs: int,
+                         max_deg: int = DRYRUN_MAX_DEG,
+                         rounds: int = 1) -> dict:
+    """The analytic placement ledger for the pod-sharded chunk: every
+    per-device resident array and per-round collective payload, in bytes,
+    grouped by what it scales with. ``k_sharded`` rows are exactly
+    ``rows_per_pod`` (= Kp/P) table rows; ``replicated``/``cohort_scaled``
+    entries never mention K; ``sync_gated`` entries only move bytes on
+    rounds where the tau schedule syncs (``sync_round_gates``), so their
+    effective per-round cost is the nominal payload times the schedule's
+    sync fraction — and exactly 0 on non-sync rounds."""
+    H1 = HIDDEN[0]
+    n_tot = n_max + g_max
+    P, B = n_pods, buckets.bucket_size
+    rpp = buckets.rows_per_pod
+    m, S = cohort_pad, rounds
+    n_params = gcn_param_count(n_feat, n_classes)
+    # bytes of one client's table + static rows (everything the owner-keyed
+    # cohort fetch moves per selected client, and the write-back returns)
+    table_row = (n_tot * H1 + n_tot + g_max * n_feat + n_max) * 4
+    static_row = (n_max * (n_feat + 3 + 2 * max_deg) + g_max) * 4
+    k_sharded = {
+        "hist1": rpp * n_tot * H1 * 4,
+        "age": rpp * n_tot * 4,
+        "ghost_feat": rpp * g_max * n_feat * 4,
+        "prev_loss": rpp * n_max * 4,
+        "features": rpp * n_max * n_feat * 4,
+        "labels": rpp * n_max * 4,
+        "node_mask": rpp * n_max * 4,
+        "train_mask": rpp * n_max * 4,
+        "nbr_idx": rpp * n_max * max_deg * 4,
+        "nbr_mask": rpp * n_max * max_deg * 4,
+        "ghost_mask": rpp * g_max * 4,
+        "ghost_src_feat": rpp * g_max * n_feat * 4,
+        "recv_buckets": rpp * g_max * 12,
+    }
+    replicated = {
+        "params": n_params * 4,
+        "cohort_stacks": S * (m * 12 + 5),     # sel/fan/w + eoff/gate
+        "wb_routing": S * (m * 8 + P * P * wb_cap * 4),
+    }
+    ghost_cut = {"send_buckets": P * B * 12}
+    eoffs = np.arange(SYNC_PROBE_ROUNDS) * local_epochs
+    frac = float(sync_round_gates(eoffs, tau, local_epochs).mean())
+    a2a = P * B * H1 * 4
+    gfetch = m * g_max * (H1 + n_feat) * 4
+    return {
+        "schema_version": 2,
+        "n_pods": P,
+        "table_shard_rows_per_pod": rpp,
+        "ghost_cut_entries": buckets.n_entries,
+        "bucket_size": B,
+        "wb_cap": int(wb_cap),
+        "per_device_resident_bytes": {
+            "k_sharded": k_sharded,
+            "replicated": replicated,
+            "ghost_cut_scaled": ghost_cut,
+        },
+        "per_round_collective_bytes": {
+            "cohort_scaled": {
+                "fetch_psum_tables": m * table_row,
+                "fetch_psum_statics": m * static_row,
+                "merge_allreduce": n_params * 4,
+                "wb_stage1_all_gather": (m // P) * table_row,
+                "wb_stage2_all_to_all": P * wb_cap * table_row,
+            },
+            "sync_gated": {
+                "ghost_all_to_all": a2a,
+                "ghost_fetch_psum": gfetch,
+            },
+        },
+        "sync": {
+            "tau": int(tau),
+            "local_epochs": int(local_epochs),
+            "rounds_probed": SYNC_PROBE_ROUNDS,
+            "sync_fraction": frac,
+            "ghost_all_to_all_effective_bytes": int(round(a2a * frac)),
+            "ghost_fetch_effective_bytes": int(round(gfetch * frac)),
+            "non_sync_round_ghost_bytes": 0,
+        },
+    }
+
+
+_POD_LEDGER_KEYS = ("schema_version", "n_pods", "table_shard_rows_per_pod",
+                    "ghost_cut_entries", "bucket_size", "wb_cap",
+                    "per_device_resident_bytes",
+                    "per_round_collective_bytes", "sync",
+                    "all_to_all_bytes", "all_gather_bytes")
+_TOP_KEYS = ("status", "arch", "mesh", "chips", "clients", "cohort",
+             "collectives", "roofline")
+
+
+def validate_fed_dryrun(result: dict) -> list[str]:
+    """Schema-check a fed_dryrun result row before it is written (the
+    ``validate_bench_round`` pattern). Returns a list of problems (empty =
+    valid): required keys present and typed, every ledger class a dict of
+    non-negative ints, the sync fraction in [0, 1], and the non-sync-round
+    ghost bytes pinned to 0 (the gated-exchange contract)."""
+    errs: list[str] = []
+    if not isinstance(result, dict):
+        return [f"result is {type(result).__name__}, expected dict"]
+    for k in _TOP_KEYS:
+        if k not in result:
+            errs.append(f"missing key {k!r}")
+    if errs:
+        return errs
+    if not isinstance(result["collectives"], dict):
+        errs.append("collectives must be a dict of byte counts")
+    if "pods" not in result:
+        return errs
+    pods = result["pods"]
+    if not isinstance(pods, dict):
+        return errs + ["pods must be a dict"]
+    for k in _POD_LEDGER_KEYS:
+        if k not in pods:
+            errs.append(f"pods missing key {k!r}")
+    if errs:
+        return errs
+    for section in ("per_device_resident_bytes",
+                    "per_round_collective_bytes"):
+        for cls, entries in pods[section].items():
+            if not isinstance(entries, dict) or not entries:
+                errs.append(f"pods.{section}.{cls} must be a non-empty dict")
+                continue
+            for name, v in entries.items():
+                if not isinstance(v, int) or v < 0:
+                    errs.append(f"pods.{section}.{cls}.{name} must be a "
+                                f"non-negative int, got {v!r}")
+    sync = pods["sync"]
+    frac = sync.get("sync_fraction")
+    if not isinstance(frac, (int, float)) or not 0.0 <= frac <= 1.0:
+        errs.append(f"pods.sync.sync_fraction must be in [0, 1], got {frac!r}")
+    if sync.get("non_sync_round_ghost_bytes") != 0:
+        errs.append("pods.sync.non_sync_round_ghost_bytes must be 0 "
+                    "(the ghost exchange is gated off entirely)")
+    a2a = sync.get("ghost_all_to_all_effective_bytes")
+    nominal = pods["per_round_collective_bytes"]["sync_gated"].get(
+        "ghost_all_to_all", 0)
+    if not isinstance(a2a, int) or a2a != int(round(nominal * frac)):
+        errs.append("pods.sync.ghost_all_to_all_effective_bytes must equal "
+                    "ghost_all_to_all x sync_fraction")
+    return errs
+
+
+def assert_k_flat(res_a: dict, res_b: dict) -> list[str]:
+    """The K-flatness contract between two dry-runs that differ ONLY in
+    ``--clients``: every replicated resident and every cohort-scaled
+    collective must be byte-identical, the k_sharded residents must scale
+    exactly with rows_per_pod (= Kp/P), and the HLO's all-gather /
+    all-reduce byte totals (write-back stage 1 + cohort fetch psums + merge
+    — the only members of those kinds) must not move. Returns a list of
+    violations (empty = the placement is K-flat)."""
+    errs: list[str] = []
+    pa, pb = res_a["pods"], res_b["pods"]
+    ka, kb = res_a["clients"], res_b["clients"]
+    for section, cls in (("per_device_resident_bytes", "replicated"),
+                         ("per_round_collective_bytes", "cohort_scaled")):
+        ea, eb = pa[section][cls], pb[section][cls]
+        for name in sorted(set(ea) | set(eb)):
+            if ea.get(name) != eb.get(name):
+                errs.append(
+                    f"{cls}.{name}: {ea.get(name)}B at K={ka} vs "
+                    f"{eb.get(name)}B at K={kb} — scales with K")
+    gf_a = pa["per_round_collective_bytes"]["sync_gated"]["ghost_fetch_psum"]
+    gf_b = pb["per_round_collective_bytes"]["sync_gated"]["ghost_fetch_psum"]
+    if gf_a != gf_b:
+        errs.append(f"sync_gated.ghost_fetch_psum: {gf_a}B vs {gf_b}B — "
+                    "scales with K")
+    ra, rb = pa["table_shard_rows_per_pod"], pb["table_shard_rows_per_pod"]
+    for name, va in pa["per_device_resident_bytes"]["k_sharded"].items():
+        vb = pb["per_device_resident_bytes"]["k_sharded"].get(name, -1)
+        if va * rb != vb * ra:
+            errs.append(f"k_sharded.{name}: {va}B/{ra} rows vs {vb}B/{rb} "
+                        "rows — not linear in K/P")
+    for kind in ("all-gather", "all-reduce"):
+        ba = res_a["collectives"].get(kind, 0)
+        bb = res_b["collectives"].get(kind, 0)
+        if ba != bb:
+            errs.append(f"HLO {kind}: {ba}B at K={ka} vs {bb}B at K={kb} — "
+                        "a lowered collective scales with K")
+    return errs
+
+
 def dryrun_mesh(mesh_name: str, args) -> dict:
     """Lower one sharded round chunk on ``mesh_name``'s chip count and
     report collectives + roofline. With ``--pods P`` the mesh is the 2-D
@@ -113,7 +315,8 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
         chunk = build_pod_sharded_chunk(vm, mesh, m, buckets, _LIGHT_STATS)
         sargs = abstract_pod_chunk_args(
             mesh, buckets, n_clients=K, cohort=m + pad, n_max=args.n_max,
-            g_max=args.g_max, n_feat=args.features, n_classes=args.classes)
+            g_max=args.g_max, n_feat=args.features, n_classes=args.classes,
+            max_deg=DRYRUN_MAX_DEG)
     else:
         mesh = make_client_mesh(chips)
         axis = client_axis_of(mesh)
@@ -154,31 +357,33 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
         "memory": {"temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
     }
     if pods:
-        # the table-placement ledger the pod mode exists for: per-device
-        # table memory is K/P rows, the ghost exchange is bucket-sized
-        # (scales with the ghost-edge cut), and the write-back moves cohort
-        # rows — compare against what replicating the (K, n_tot, H1) table
-        # per chunk costs the client-sharded executor
-        n_tot = args.n_max + args.g_max
-        table_bytes = K * n_tot * HIDDEN[0] * 4
-        result["pods"] = {
-            "n_pods": pods,
-            "ghost_cut_entries": buckets.n_entries,
-            "bucket_size": buckets.bucket_size,
-            "all_to_all_bytes": int(coll.bytes_by_kind.get("all-to-all", 0)),
-            "all_gather_bytes": int(coll.bytes_by_kind.get("all-gather", 0)),
-            "replicated_hist1_bytes": table_bytes,
-            "table_shard_rows_per_pod": buckets.rows_per_pod,
-        }
+        # the placement ledger the pod mode exists for: classify every
+        # resident and collective by what its bytes scale with, and read
+        # the write-back bucket capacity off the lowered args themselves
+        # (sargs[-1] is wb_recv (S, P, P, cap) — cap depends on m only)
+        wb_cap = sargs[-1].shape[-1]
+        ledger = pod_placement_ledger(
+            buckets, n_pods=pods, cohort_pad=m + pad, wb_cap=wb_cap,
+            n_max=args.n_max, g_max=args.g_max, n_feat=args.features,
+            n_classes=args.classes, tau=args.tau,
+            local_epochs=mcfg.local_epochs)
+        ledger["all_to_all_bytes"] = int(
+            coll.bytes_by_kind.get("all-to-all", 0))
+        ledger["all_gather_bytes"] = int(
+            coll.bytes_by_kind.get("all-gather", 0))
+        result["pods"] = ledger
     print(rep.pretty())
     print(f"    [{mesh_name}] K={K}" + (f" pods={pods}" if pods else "")
           + f" compile={result['compile_s']}s collectives: {coll.summary()}")
     if pods:
         p = result["pods"]
-        print(f"    [{mesh_name}] ghost-cut={p['ghost_cut_entries']} entries; "
-              f"write-back a2a={p['all_to_all_bytes']:,}B + "
-              f"ag={p['all_gather_bytes']:,}B vs replicated hist1 "
-              f"{p['replicated_hist1_bytes']:,}B")
+        resid = p["per_device_resident_bytes"]
+        print(f"    [{mesh_name}] K/P={p['table_shard_rows_per_pod']} rows/pod "
+              f"({sum(resid['k_sharded'].values()):,}B sharded, "
+              f"{sum(resid['replicated'].values()):,}B replicated); "
+              f"ghost a2a {p['sync']['ghost_all_to_all_effective_bytes']:,}B "
+              f"effective at sync fraction {p['sync']['sync_fraction']:.2f} "
+              f"(0B on non-sync rounds)")
     return result
 
 
@@ -200,6 +405,16 @@ def main(argv=None):
                     help="occupied fraction of ghost slots in the synthetic "
                          "pod topology — the ghost-cut knob the --pods "
                          "write-back bytes should track")
+    ap.add_argument("--tau", type=int, default=8,
+                    help="staleness threshold for the --pods ledger's sync "
+                         "fraction (the tau schedule gates the ghost "
+                         "all-to-all; with J=4 local epochs tau=8 syncs "
+                         "every other round)")
+    ap.add_argument("--assert-k-flat", type=int, default=0, metavar="K2",
+                    help="with --pods: lower the chunk a second time at K2 "
+                         "clients and fail unless every replicated resident "
+                         "and cohort-scaled collective is byte-identical "
+                         "(the CI proof that nothing scales with K)")
     ap.add_argument("--n-max", type=int, default=512)
     ap.add_argument("--g-max", type=int, default=256)
     ap.add_argument("--features", type=int, default=128)
@@ -216,6 +431,9 @@ def main(argv=None):
     if args.force_devices:
         _force_host_devices(args.force_devices)
 
+    if args.assert_k_flat and not (args.pods and args.clients):
+        ap.error("--assert-k-flat needs --pods and an explicit --clients")
+
     meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
     rc = 0
     for mesh_name in meshes:
@@ -225,6 +443,35 @@ def main(argv=None):
             print(f"[{mesh_name}] ERROR: {type(e).__name__}: {e}")
             rc = 1
             continue
+        problems = validate_fed_dryrun(result)
+        if problems:
+            print(f"[{mesh_name}] INVALID result, not writing:")
+            for p in problems:
+                print(f"    - {p}")
+            rc = 1
+            continue
+        if args.assert_k_flat:
+            args2 = argparse.Namespace(**{**vars(args),
+                                          "clients": args.assert_k_flat})
+            try:
+                result2 = dryrun_mesh(mesh_name, args2)
+            except Exception as e:
+                print(f"[{mesh_name}] ERROR at K={args.assert_k_flat}: "
+                      f"{type(e).__name__}: {e}")
+                rc = 1
+                continue
+            violations = assert_k_flat(result, result2)
+            if violations:
+                print(f"[{mesh_name}] K-FLATNESS VIOLATED "
+                      f"(K={args.clients} vs K={args.assert_k_flat}):")
+                for v in violations:
+                    print(f"    - {v}")
+                rc = 1
+                continue
+            print(f"    [{mesh_name}] K-flat: replicated residents, "
+                  f"cohort-scaled collectives, and lowered all-gather/"
+                  f"all-reduce bytes identical at K={args.clients} and "
+                  f"K={args.assert_k_flat}; k_sharded exactly linear in K/P")
         if args.out:
             os.makedirs(args.out, exist_ok=True)
             tag = f"_pods{args.pods}" if args.pods else ""

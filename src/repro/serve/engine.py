@@ -247,8 +247,14 @@ class QueryEngine:
 
     def add_nodes(self, feats, edges=None):
         """Streaming node insert (optionally with attachment edges):
-        invalidates the new nodes' 1-hop neighborhood."""
+        invalidates the new nodes' 1-hop neighborhood. If the insert grew
+        the store past its allocation, the device mirrors re-allocate and
+        every bucket shape re-warms BEFORE any feature write — a scatter
+        past the old capacity would silently drop (JAX OOB-scatter rule),
+        and the first post-growth query must not trace."""
         ids, affected = self.model.store.add_nodes(feats, edges)
+        if self.model.ensure_capacity():
+            self.warmup()
         self.model.set_features(ids, self.model.store.features[ids])
         self.model.invalidate(affected)
         return ids, affected

@@ -211,6 +211,25 @@ class ServedModel:
         return _layer1_full(self.params, self.feat, jnp.asarray(s.nbr_idx),
                             jnp.asarray(s.nbr_mask), backend=self.backend, **kw)
 
+    def ensure_capacity(self) -> bool:
+        """Mirror a :class:`GraphStore` capacity growth into the device
+        state: re-pull the feature mirror (the store already holds every
+        row), zero-extend the h1 cache (old rows copied bit-for-bit — the
+        warm cache survives the growth), and pad the host bookkeeping.
+        Returns True if anything was re-allocated (the caller must then
+        re-warm its compiled shapes, since (capacity, ·) operands changed)."""
+        cap = self.store.capacity
+        old = self.h1.shape[0]
+        if cap == old:
+            return False
+        self.feat = jnp.asarray(self.store.features)
+        self.h1 = jnp.zeros((cap, self.h1.shape[1]),
+                            self.h1.dtype).at[:old].set(self.h1)
+        self.valid = np.concatenate([self.valid, np.zeros(cap - old, bool)])
+        self.row_version = np.concatenate(
+            [self.row_version, np.full(cap - old, self.step, np.int64)])
+        return True
+
     def invalidate(self, rows: np.ndarray) -> int:
         rows = np.asarray(rows, np.int64)
         n_new = int(self.valid[rows].sum())

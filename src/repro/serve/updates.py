@@ -11,6 +11,13 @@ every neighbor it attaches to — nothing else (the layer-2 consumers read h1
 at query time and are never cached). ``refresh_invalid`` is the background
 re-embed batch (driven through ``QueryEngine.refresh``, which owns the
 bucket-shaped compiled compute).
+
+Capacity is elastic: when an insert outgrows the current allocation the
+store grows geometrically (``growth`` factor, default 1.5x) instead of
+failing, so a long-lived serving process absorbs unbounded streams with
+amortized O(1) copies. ``CapacityError`` is reserved for the configurable
+hard ceiling (``max_capacity``) — the operator's memory budget — and is
+never raised when no ceiling is set.
 """
 from __future__ import annotations
 
@@ -18,21 +25,24 @@ import numpy as np
 
 
 class CapacityError(RuntimeError):
-    """The store's pre-allocated node capacity is exhausted."""
+    """The store's configured ``max_capacity`` hard ceiling is exhausted."""
 
 
 class GraphStore:
-    """Mutable padded-adjacency graph with pre-allocated node capacity.
+    """Mutable padded-adjacency graph with elastic node capacity.
 
     Arrays (host numpy; the device mirrors live on ``ServedModel``):
         features (capacity, F) float32
         nbr_idx  (capacity, D) int32
         nbr_mask (capacity, D) float32
-    Rows ``[0, n_active)`` are live; the rest are zeroed headroom.
+    Rows ``[0, n_active)`` are live; the rest are zeroed headroom. Inserts
+    past the headroom grow the arrays geometrically (``growth``); only the
+    optional ``max_capacity`` hard cap ever raises :class:`CapacityError`.
     """
 
     def __init__(self, features: np.ndarray, nbr_idx: np.ndarray,
                  nbr_mask: np.ndarray, *, capacity: int | None = None,
+                 max_capacity: int | None = None, growth: float = 1.5,
                  headroom: float = 0.25, seed: int = 0):
         n, f = features.shape
         d = nbr_idx.shape[1]
@@ -40,6 +50,14 @@ class GraphStore:
             capacity = n + max(64, int(np.ceil(n * headroom)))
         if capacity < n:
             raise ValueError(f"capacity {capacity} < {n} initial nodes")
+        if growth <= 1.0:
+            raise ValueError(f"growth factor must be > 1, got {growth}")
+        if max_capacity is not None and max_capacity < capacity:
+            raise ValueError(f"max_capacity {max_capacity} < initial "
+                             f"capacity {capacity}")
+        self.max_capacity = max_capacity
+        self.growth = float(growth)
+        self.n_grows = 0
         self.n_active = n
         self.max_deg = d
         self.features = np.zeros((capacity, f), np.float32)
@@ -68,6 +86,31 @@ class GraphStore:
     def degrees(self, rows: np.ndarray | None = None) -> np.ndarray:
         m = self.nbr_mask[: self.n_active] if rows is None else self.nbr_mask[rows]
         return m.sum(-1).astype(np.int64)
+
+    def _grow(self, needed: int) -> None:
+        """Geometric reallocation to fit ``needed`` live rows: the new
+        capacity is max(ceil(capacity x growth), needed), clamped to the
+        ``max_capacity`` ceiling — which is also the only condition that
+        still raises :class:`CapacityError`."""
+        if needed <= self.capacity:
+            return
+        if self.max_capacity is not None and needed > self.max_capacity:
+            raise CapacityError(
+                f"GraphStore hard cap: {needed} nodes exceeds max_capacity "
+                f"{self.max_capacity} (raise the ceiling or evict)")
+        new_cap = max(int(np.ceil(self.capacity * self.growth)), needed)
+        if self.max_capacity is not None:
+            new_cap = min(new_cap, self.max_capacity)
+
+        def pad(a: np.ndarray) -> np.ndarray:
+            out = np.zeros((new_cap,) + a.shape[1:], a.dtype)
+            out[: len(a)] = a
+            return out
+
+        self.features = pad(self.features)
+        self.nbr_idx = pad(self.nbr_idx)
+        self.nbr_mask = pad(self.nbr_mask)
+        self.n_grows += 1
 
     # -- mutations -------------------------------------------------------
 
@@ -123,10 +166,7 @@ class GraphStore:
         cache rows to invalidate."""
         feats = np.asarray(feats, np.float32).reshape(-1, self.n_features)
         c = len(feats)
-        if self.n_active + c > self.capacity:
-            raise CapacityError(
-                f"GraphStore full: {self.n_active} + {c} new nodes exceeds "
-                f"capacity {self.capacity} (pre-allocate more headroom)")
+        self._grow(self.n_active + c)
         ids = np.arange(self.n_active, self.n_active + c, dtype=np.int64)
         self.features[ids] = feats
         self.n_active += c

@@ -80,24 +80,56 @@ def replicate_to_mesh(tree, mesh: Mesh):
     return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
 
 
-def _client_step(vm, mesh: Mesh, axis: str):
+def pairwise_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic fp32 binary-tree reduction over the leading axis:
+    pairs sum left-to-right level by level, so the association order is
+    fixed by the leading-axis length alone (never by how XLA schedules an
+    all-reduce). Used by ``reduce="pairwise"`` merges on both the 1-D
+    client mesh and the 2-D pod mesh (repro.sharding.tables)."""
+    while x.shape[0] > 1:
+        n = x.shape[0]
+        even = (n // 2) * 2
+        y = x[0:even:2] + x[1:even:2]
+        if n % 2:
+            y = jnp.concatenate([y, x[even:]], axis=0)
+        x = y
+    return x[0]
+
+
+def weighted_merge(axes, w, reduce: str):
+    """The sharded executors' aggregation rule: sum(w·x)/sum(w) across the
+    mesh ``axes`` — a weighted psum all-reduce (``reduce="psum"``) or a
+    deterministic fp32 binary tree over all-gathered per-device partial
+    sums (``reduce="pairwise"``). Returns the per-leaf mean function."""
+    if reduce == "psum":
+        wsum = jax.lax.psum(w.sum(), axes)
+
+        def wmean(x):
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jax.lax.psum((x * wb).sum(axis=0), axes) / wsum
+    else:   # "pairwise": association fixed by device count, not by XLA
+        wsum = pairwise_sum(jax.lax.all_gather(w.sum(), axes))
+
+        def wmean(x):
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            part = jax.lax.all_gather((x * wb).sum(axis=0), axes, axis=0)
+            return pairwise_sum(part) / wsum
+    return wmean
+
+
+def _client_step(vm, mesh: Mesh, axis: str, reduce: str):
     """The per-round client half, shard-mapped over the cohort axis:
-    vmapped LocalUpdate on each device's cohort shard + weighted
-    all-reduce aggregation. Per-client outputs stay sharded on their
-    leading axis (out_specs P(axis)); the aggregated params come back
-    replicated (psum)."""
+    vmapped LocalUpdate on each device's cohort shard + weighted merge
+    (all-reduce, or the deterministic pairwise tree). Per-client outputs
+    stay sharded on their leading axis (out_specs P(axis)); the aggregated
+    params come back replicated."""
 
     def step(params, client, feats_all, hist1_all, h1s, ages, gfs, pls,
              tau, fanouts, eoff, keys, w):
         out = vm(params, client, feats_all, hist1_all, h1s, ages, gfs, pls,
                  tau, fanouts, eoff, keys)
         new_params, new_hist1, new_age, new_ghost, stats = out
-        wsum = jax.lax.psum(w.sum(), axis)
-
-        def wmean(x):
-            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
-            return jax.lax.psum((x * wb).sum(axis=0), axis) / wsum
-
+        wmean = weighted_merge(axis, w, reduce)
         agg = jax.tree_util.tree_map(wmean, new_params)
         return agg, new_hist1, new_age, new_ghost, stats
 
@@ -110,7 +142,8 @@ def _client_step(vm, mesh: Mesh, axis: str):
 
 
 def build_sharded_chunk(vm, mesh: Mesh, axis: str, m_real: int,
-                        light_stats: Sequence[str]):
+                        light_stats: Sequence[str], *,
+                        reduce: str = "psum"):
     """The sharded twin of FedEngine._build_fused_chunk: one jitted donated
     chunk scanning ``round_step`` over S rounds, with the vmapped client
     half shard-mapped over ``axis``.
@@ -120,9 +153,14 @@ def build_sharded_chunk(vm, mesh: Mesh, axis: str, m_real: int,
     ``fan_stack`` and ``eoffs``. ``sel_stack``/``fan_stack`` arrive padded
     to a multiple of the mesh axis; ``m_real`` is the true cohort size
     (static), which fixes the PRNG split count and the slice of per-round
-    stats streamed back to the host tail.
+    stats streamed back to the host tail. ``reduce`` picks the merge:
+    ``"psum"`` (weighted all-reduce) or ``"pairwise"`` (fp32 fixed tree
+    over gathered partials — the same ``merge_reduce`` knob the pod mesh
+    honors, so 1-D meshes no longer silently fall back to psum).
     """
-    step = _client_step(vm, mesh, axis)
+    if reduce not in ("psum", "pairwise"):
+        raise ValueError(f"unknown reduce {reduce!r}; known: psum | pairwise")
+    step = _client_step(vm, mesh, axis, reduce)
     light_stats = tuple(light_stats)
 
     def chunk(params, hist1, age, ghost_feat, prev_loss, key, arrays,

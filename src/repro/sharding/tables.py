@@ -1,46 +1,50 @@
-"""Pod-sharded historical tables: the second unit of federated scale-out.
+"""Pod-sharded placement: no per-device resident or collective scales with K.
 
 Client sharding (repro.sharding.fed) splits each round's cohort across
-devices but still replicates the (K, n_tot, H1) ``hist1``/``age`` tables —
-and the (K, g_max, F) synced-ghost and (K, n_max) prev-loss tables — on
-every device, and re-broadcasts them at every chunk boundary. That is the
-cross-client communication/memory wall FedGCN-style systems hit first: per
--device table memory and write-back traffic both scale with the TOTAL
-client count K, not with the work a round actually does.
+devices but replicates all global state. This module places EVERY K-sized
+array — the (K, n_tot, H1) ``hist1``/``age`` tables, the (K, g_max, F)
+synced-ghost and (K, n_max) prev-loss tables, AND the static client arrays
+(features, padded adjacency, labels/masks) — as pod shards over a
+``("pods", "clients")`` 2-D mesh: pod p owns the rows of its resident
+clients (the K axis block-partitioned with ``NamedSharding``, zero-row
+padded to divisibility by the same ``pod_table_padding`` contract), while
+each round's cohort still splits over all P×C devices. Four exchanges
+replace the replicated dataflow, each sized by what the round touches:
 
-This module shards the tables themselves over a ``("pods", "clients")``
-2-D mesh: pod p owns the table rows of its resident clients (the K axis
-block-partitioned over the ``"pods"`` axis with ``NamedSharding``), while
-each round's cohort still splits over all P×C devices. Three exchanges
-replace the replicated-table dataflow, sized by what the round touches
-rather than by K:
-
-* **ghost-bucket all-to-all** — the cross-pod embedding synchronization.
-  ``pull_ghosts`` cannot gather from a replicated ``hist1_all`` snapshot
-  any more, so each round starts with a ``jax.lax.all_to_all`` over
-  partition-time send/recv buckets (``federated.partition.
-  ghost_exchange_buckets``): pod p sends pod q exactly the deduplicated
-  owner rows q's residents reference as ghosts. Bytes scale with the
-  ghost-edge cut — the quantity FedAIS's adaptive sync bounds — not with
-  K·n_tot·H1.
-* **owner-keyed cohort fetch** — the m selected clients' own table rows
-  are pulled from their owner pods by a masked psum (each row has exactly
-  one non-zero contributor), O(m·n_tot) bytes.
-* **cohort write-back** — fresh rows all-gather across the cohort axis
-  (O(m·n_tot), K-independent) and each pod scatters only the rows it owns
-  (out-of-range ids drop, so dummies and non-residents never land).
+* **owner-keyed cohort fetch** — the m selected clients' table rows AND
+  static arrays are pulled from their owner pods by a masked psum (each
+  row has exactly one non-zero contributor), O(m·row) bytes. Cohort
+  dummies (id Kp) have no owner and fetch zeros — every consumer of
+  all-zero client data is NaN-guarded, and the dummy's outputs are
+  discarded anyway (weight 0, write-back dropped).
+* **gated ghost-bucket all-to-all** — the cross-pod layer-1 embedding
+  sync (``federated.partition.ghost_exchange_buckets``), now under a
+  ``lax.cond`` on a host-derived per-round predicate
+  (``sync_round_gates``): the tau schedule decides on the host whether ANY
+  of the round's J local epochs syncs, and non-sync rounds skip the
+  exchange entirely — zero bytes, not masked bytes. Bit-parity holds
+  because the LocalUpdate never reads the prefetched sources on such
+  rounds (its per-epoch ``do_sync`` cond derives from the same eoff/tau).
+* **static ghost-feature fetch** — the layer-0 ghost sources come from a
+  partition-time bucketed owner exchange
+  (``federated.partition.exchange_ghost_features``) that materializes a
+  pod-sharded (Kp, g_max, F) source table once; per round the cohort's
+  rows ride the same gated owner-keyed fetch.
+* **cohort-keyed write-back** — fresh rows all-gather only within the pod
+  row (m/P rows), then a host-routed bucket ``all_to_all``
+  (``federated.partition.writeback_routing``) delivers each row straight
+  to its owner pod — P·cap rows per device, cap ≈ m/P² in expectation,
+  instead of the dense m-row cohort all-gather.
 
 Aggregation stays the weighted psum all-reduce of the client-sharded
-executor, with an optional ``reduce="pairwise"`` mode that gathers the
-per-device partial sums and reduces them in a fixed fp32 binary tree —
-deterministic summation order for when all-reduce reassociation drift
-matters at depth.
+executor, with ``reduce="pairwise"`` for the deterministic fp32 tree
+(``sharding.fed.weighted_merge``).
 
 Parity contract (tests/test_pod_sharding.py): history is allclose to the
 client-sharded and unsharded fused runs with every discrete column exact —
 the per-client computation is identical (``pull_ghosts_prefetched`` hands
-each client the same round-start snapshot rows), only the merge's summation
-order differs.
+each client the same round-start snapshot rows; skipped exchanges feed
+rounds that never read them), only the merge's summation order differs.
 """
 from __future__ import annotations
 
@@ -48,13 +52,27 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.federated.partition import GhostBuckets, pod_table_padding
-from repro.sharding.fed import CLIENT_AXIS
+from repro.sharding.fed import CLIENT_AXIS, pairwise_sum, weighted_merge
+
+__all__ = [
+    "POD_AXIS", "make_pod_mesh", "pod_axes_of", "pad_tables_to_pods",
+    "shard_tables_to_mesh", "pairwise_sum", "sync_round_gates",
+    "build_pod_sharded_chunk", "abstract_pod_chunk_args",
+]
 
 POD_AXIS = "pods"
+
+# client-array keys the pod-sharded executor keeps on device. The
+# "prefetched" LocalUpdate never reads ghost_owner/ghost_row (the bucketed
+# exchanges already routed by them on the host), so those two stay off the
+# mesh entirely.
+POD_ARRAY_KEYS = ("features", "labels", "node_mask", "train_mask",
+                  "nbr_idx", "nbr_mask", "ghost_mask")
 
 
 def make_pod_mesh(n_pods: int, n_client_shards: Optional[int] = None) -> Mesh:
@@ -91,67 +109,69 @@ def pod_axes_of(mesh: Mesh) -> Optional[tuple[str, str]]:
 
 
 def pad_tables_to_pods(tables, n_pods: int):
-    """Pad each (K, ...) table with zero rows so K splits evenly over the
-    pod axis. Returns the padded tuple (no-op when already divisible)."""
-    K = tables[0].shape[0]
+    """Pad every (K, ...) leaf of a pytree (tuple of tables, dict of client
+    arrays) with zero rows so K splits evenly over the pod axis. Returns
+    the same structure (unchanged when already divisible)."""
+    leaves = jax.tree_util.tree_leaves(tables)
+    K = leaves[0].shape[0]
     pad = pod_table_padding(K, n_pods)      # the bucket builder's Kp rule
     if not pad:
-        return tuple(tables)
-    return tuple(
-        jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1)) for t in tables)
+        return tables
+    return jax.tree_util.tree_map(
+        lambda t: jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1)), tables)
 
 
 def shard_tables_to_mesh(tables, mesh: Mesh):
-    """Commit each (Kp, ...) table to the mesh sharded over the pod axis on
+    """Commit every (Kp, ...) leaf to the mesh sharded over the pod axis on
     its leading (client) dimension — pod p holds its residents' rows,
-    replicated across the ``"clients"`` axis."""
+    replicated across the ``"clients"`` axis. Works on any pytree (the
+    four-table tuple, the static client-array dict, a lone gsrc array)."""
     sh = NamedSharding(mesh, P(POD_AXIS))
-    return tuple(jax.device_put(t, sh) for t in tables)
+    return jax.tree_util.tree_map(lambda t: jax.device_put(t, sh), tables)
 
 
-def pairwise_sum(x: jnp.ndarray) -> jnp.ndarray:
-    """Deterministic fp32 binary-tree reduction over the leading axis:
-    pairs sum left-to-right level by level, so the association order is
-    fixed by the leading-axis length alone (never by how XLA schedules an
-    all-reduce). Used by ``reduce="pairwise"`` merges."""
-    while x.shape[0] > 1:
-        n = x.shape[0]
-        even = (n // 2) * 2
-        y = x[0:even:2] + x[1:even:2]
-        if n % 2:
-            y = jnp.concatenate([y, x[even:]], axis=0)
-        x = y
-    return x[0]
+def sync_round_gates(eoffs, tau: int, local_epochs: int, *,
+                     enabled: bool = True) -> np.ndarray:
+    """Host-derived per-round sync predicate: does ANY of the round's J
+    local epochs hit the tau schedule? Epoch j of a round with epoch
+    offset e syncs iff ``(e + j) % max(tau, 1) == 0`` (the LocalUpdate's
+    ``do_sync``, with ``enabled = use_ghosts and not use_generator``
+    folding in the method's static toggles). tau is a host int between
+    chunks (the sync controller updates it at eval boundaries), so the
+    gate is exact — rounds where it is False skip the ghost exchanges
+    entirely and contribute zero collective bytes."""
+    eoffs = np.asarray(eoffs, np.int64).reshape(-1)
+    if not enabled:
+        return np.zeros(eoffs.shape, bool)
+    t = max(int(tau), 1)
+    j = np.arange(int(local_epochs), dtype=np.int64)
+    return (((eoffs[:, None] + j) % t) == 0).any(axis=1)
 
 
 def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
-    """The per-round client half over a ``("pods", "clients")`` mesh: ghost
-    all-to-all, owner-keyed cohort fetch, vmapped LocalUpdate on each
-    device's cohort slice, weighted merge, and the pod-local write-back.
-    Table in/out specs are P("pods"); cohort specs P(("pods", "clients"))."""
+    """The per-round client half over a ``("pods", "clients")`` mesh:
+    owner-keyed cohort fetch of static arrays + table rows, the gated ghost
+    exchange, vmapped LocalUpdate on each device's cohort slice, weighted
+    merge, and the bucket-routed write-back. Pod-sharded in/out specs are
+    P("pods"); cohort specs P(("pods", "clients")); routing replicated."""
     P_, C = mesh.shape[POD_AXIS], mesh.shape[CLIENT_AXIS]
     rpp = buckets.rows_per_pod
     axes = (POD_AXIS, CLIENT_AXIS)
 
-    def step(params, client, feats_all, hist_sh, age_sh, gfeat_sh, pl_sh,
-             sel, tau, fanouts, eoff, keys, w,
+    def step(params, arrays, gsrc, hist_sh, age_sh, gfeat_sh, pl_sh,
+             sel, tau, fanouts, eoff, keys, w, gate, wdst, wpos, wrecv,
              send_client, send_row, send_mask, recv_src, recv_pos, recv_mask):
         p_i = jax.lax.axis_index(POD_AXIS)
         c_i = jax.lax.axis_index(CLIENT_AXIS)
         mL = keys.shape[0]
+        msl = C * mL                       # one pod row's cohort slice
 
-        # ---- ghost-bucket all-to-all: round-start hist1 rows cross pods ----
-        # send_* arrive (1, P, B) — this pod's row of the (P, P, B) plan
-        sc, sr, sm = send_client[0], send_row[0], send_mask[0]
-        sbuf = hist_sh[sc, sr] * sm[..., None]                  # (P, B, H1)
-        rbuf = jax.lax.all_to_all(sbuf, POD_AXIS, 0, 0, tiled=True)
-        # reassemble my residents' ghost-source rows from the received buckets
-        gh_res = rbuf[recv_src, recv_pos] * recv_mask[..., None]  # (rpp, g, H1)
-
-        # ---- owner-keyed fetch of the cohort's table rows ----
+        # ---- owner-keyed fetch of the cohort's rows (tables + statics) ----
         # exactly one (pod, clients=0) device contributes each row; the psum
-        # broadcasts it (ints stay exact, floats gain only +0.0 terms)
-        owner_pod = sel // rpp                 # padded dummies (id Kp) -> P_
+        # broadcasts it (ints stay exact, floats gain only +0.0 terms).
+        # Dummies (id Kp) have owner_pod == P_ — nobody contributes, they
+        # train on all-zero data and their outputs are discarded anyway.
+        owner_pod = sel // rpp
         local_row = jnp.clip(sel - owner_pod * rpp, 0, rpp - 1)
         own = (owner_pod == p_i) & (c_i == 0)
 
@@ -162,59 +182,77 @@ def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
 
         d = p_i * C + c_i
 
-        def chunk_of(tbl):
+        def cohort_fetch(tbl):
             return jax.lax.dynamic_slice_in_dim(fetch(tbl), d * mL, mL, 0)
 
-        hist_l = chunk_of(hist_sh)
-        age_l = chunk_of(age_sh)
-        gfeat_l = chunk_of(gfeat_sh)
-        pl_l = chunk_of(pl_sh)
-        ghs_l = chunk_of(gh_res)               # (mL, g_max, H1) ghost sources
+        client = {k: cohort_fetch(v) for k, v in arrays.items()}
+        hist_l = cohort_fetch(hist_sh)
+        age_l = cohort_fetch(age_sh)
+        gfeat_l = cohort_fetch(gfeat_sh)
+        pl_l = cohort_fetch(pl_sh)
 
-        # layer-0 ghost features: local gather on the replicated features
-        # (same clamped indices pull_ghosts would use)
-        owner = jnp.maximum(client["ghost_owner"], 0)
-        gfs_l = feats_all[owner, client["ghost_row"]]     # (mL, g_max, F)
+        # ---- gated ghost exchange: only when the tau schedule syncs ----
+        # the whole block — bucketed hist1 all-to-all, recv reassembly, and
+        # both ghost-source cohort fetches — sits under one lax.cond on the
+        # replicated host-derived gate, so non-sync rounds move ZERO bytes.
+        # The zeros branch is safe: the LocalUpdate's per-epoch do_sync is
+        # False for every epoch of a gated-off round, so it never reads them.
+        g_max = recv_src.shape[1]
+        H1 = hist_sh.shape[-1]
+
+        def with_sync(_):
+            # send_* arrive (1, P, B) — this pod's row of the (P, P, B) plan
+            sc, sr, sm = send_client[0], send_row[0], send_mask[0]
+            sbuf = hist_sh[sc, sr] * sm[..., None]              # (P, B, H1)
+            rbuf = jax.lax.all_to_all(sbuf, POD_AXIS, 0, 0, tiled=True)
+            gh_res = rbuf[recv_src, recv_pos] * recv_mask[..., None]
+            return cohort_fetch(gh_res), cohort_fetch(gsrc)
+
+        def without_sync(_):
+            return (jnp.zeros((mL, g_max, H1), hist_sh.dtype),
+                    jnp.zeros((mL, g_max, gsrc.shape[-1]), gsrc.dtype))
+
+        ghs_l, gfs_l = jax.lax.cond(gate, with_sync, without_sync, None)
 
         out = vm(params, client, gfs_l, ghs_l, hist_l, age_l, gfeat_l, pl_l,
                  tau, fanouts, eoff, keys)
         new_params, new_hist1, new_age, new_gfeat, stats = out
 
         # ---- aggregation: weighted all-reduce, or fp32 pairwise tree ----
-        if reduce == "psum":
-            wsum = jax.lax.psum(w.sum(), axes)
-
-            def wmean(x):
-                wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
-                return jax.lax.psum((x * wb).sum(axis=0), axes) / wsum
-        else:   # "pairwise": association fixed by device count, not by XLA
-            wsum = pairwise_sum(jax.lax.all_gather(w.sum(), axes))
-
-            def wmean(x):
-                wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
-                part = jax.lax.all_gather((x * wb).sum(axis=0), axes, axis=0)
-                return pairwise_sum(part) / wsum
-
+        wmean = weighted_merge(axes, w, reduce)
         agg = jax.tree_util.tree_map(wmean, new_params)
 
-        # ---- write-back: cohort all-gather + pod-local scatter ----
-        # fresh rows cross the mesh once (O(m * n_tot), K-independent); each
-        # pod then scatters only its residents — non-owned and dummy rows
-        # get an out-of-range target and the scatter drops them
-        def gather_cohort(x):
-            return jax.lax.all_gather(x, axes, axis=0, tiled=True)
+        # ---- cohort-keyed bucket write-back ----
+        # stage 1: gather the pod row's cohort slice (m/P rows) across the
+        # clients axis — device order makes slice index i = global cohort
+        # index p_i*msl + i, matching the host routing. stage 2: scatter
+        # rows into per-destination send buckets (dummy dst == P_ drops) and
+        # swap with one pods all-to-all; each pod lands its received rows at
+        # the host-routed local targets (sentinel rpp drops unused slots).
+        dst = jax.lax.dynamic_slice_in_dim(wdst, p_i * msl, msl, 0)
+        pos = jax.lax.dynamic_slice_in_dim(wpos, p_i * msl, msl, 0)
+        tgt = jax.lax.dynamic_slice_in_dim(wrecv, p_i, 1, 0)[0].reshape(-1)
+        cap = wrecv.shape[-1]
 
-        tgt = jnp.where(owner_pod == p_i, sel - p_i * rpp, rpp)
-        hist_sh = hist_sh.at[tgt].set(gather_cohort(new_hist1))
-        age_sh = age_sh.at[tgt].set(gather_cohort(new_age))
-        gfeat_sh = gfeat_sh.at[tgt].set(gather_cohort(new_gfeat))
-        pl_sh = pl_sh.at[tgt].set(gather_cohort(stats["loss_all"]))
+        def write_back(table, fresh):
+            rows = jax.lax.all_gather(fresh, CLIENT_AXIS, axis=0, tiled=True)
+            sbuf = jnp.zeros((P_, cap) + rows.shape[1:], rows.dtype)
+            sbuf = sbuf.at[dst, pos].set(rows)
+            rbuf = jax.lax.all_to_all(sbuf, POD_AXIS, 0, 0, tiled=True)
+            return table.at[tgt].set(
+                rbuf.reshape((P_ * cap,) + rbuf.shape[2:]))
+
+        hist_sh = write_back(hist_sh, new_hist1)
+        age_sh = write_back(age_sh, new_age)
+        gfeat_sh = write_back(gfeat_sh, new_gfeat)
+        pl_sh = write_back(pl_sh, stats["loss_all"])
         return agg, hist_sh, age_sh, gfeat_sh, pl_sh, stats
 
     t, c, r = P(POD_AXIS), P(axes), P()
     return shard_map(
         step, mesh=mesh,
-        in_specs=(r, c, r, t, t, t, t, r, r, c, r, c, c, t, t, t, t, t, t),
+        in_specs=(r, t, t, t, t, t, t, r, r, c, r, c, c, r, r, r, r,
+                  t, t, t, t, t, t),
         out_specs=(r, t, t, t, t, c),
         check_rep=False)
 
@@ -225,16 +263,20 @@ def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
                             reduce: str = "psum"):
     """The pod-sharded twin of ``sharding.fed.build_sharded_chunk``: one
     jitted donated chunk scanning ``round_step`` over S rounds with the
-    historical tables resident as pod shards.
+    historical tables AND static client arrays resident as pod shards.
 
-    Same argument order as the client-sharded chunk; the four table
-    arguments arrive padded to ``buckets.n_clients_padded`` rows and
-    committed to the mesh with ``P("pods")`` shardings
-    (``pad_tables_to_pods`` + ``shard_tables_to_mesh``). ``vm`` must be the
+    Signature (vs the client-sharded chunk): ``arrays`` carries only the
+    ``POD_ARRAY_KEYS`` leaves padded to ``buckets.n_clients_padded`` rows
+    and committed with ``P("pods")`` shardings (``pad_tables_to_pods`` +
+    ``shard_tables_to_mesh``), ``gsrc`` is the partition-time (Kp, g_max,
+    F) ghost-source feature table, and three host-routed per-round stacks
+    follow tau: ``gates`` (S,) bool from ``sync_round_gates``, and the
+    ``writeback_routing`` plan's ``wb_dst``/``wb_pos`` (S, m) +
+    ``wb_recv`` (S, P, P, cap). ``vm`` must be the
     ``ghost_source="prefetched"`` vmapped LocalUpdate. Cohort padding uses
-    dummy id ``n_clients_padded`` (fully out of range of the padded tables,
-    so fetches are zero and write-backs drop). ``reduce`` picks the merge:
-    ``"psum"`` (weighted all-reduce) or ``"pairwise"`` (fp32 tree)."""
+    dummy id ``n_clients_padded`` (no owner pod: fetches zero, write-backs
+    drop). ``reduce`` picks the merge: ``"psum"`` (weighted all-reduce) or
+    ``"pairwise"`` (fp32 tree)."""
     if reduce not in ("psum", "pairwise"):
         raise ValueError(f"unknown reduce {reduce!r}; known: psum | pairwise")
     step = _pod_step(vm, mesh, buckets, reduce)
@@ -243,14 +285,15 @@ def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
         buckets.send_client, buckets.send_row, buckets.send_mask,
         buckets.recv_src, buckets.recv_pos, buckets.recv_mask))
 
-    def chunk(params, hist1, age, ghost_feat, prev_loss, key, arrays,
-              sel_stack, fan_stack, w_stack, eoffs, tau):
+    def chunk(params, hist1, age, ghost_feat, prev_loss, key, arrays, gsrc,
+              sel_stack, fan_stack, w_stack, eoffs, tau, gates,
+              wb_dst, wb_pos, wb_recv):
         m_pad = sel_stack.shape[1]
         pad = m_pad - m_real
 
         def round_step(carry, xs):
             params, hist1, age, ghost_feat, prev_loss, key = carry
-            sel, fanouts, w, eoff = xs
+            sel, fanouts, w, eoff, gate, wdst, wpos, wrecv = xs
             # the unsharded executor's exact key chain: split for the real
             # cohort only, dummies ride along on a constant zero key
             ks = jax.random.split(key, m_real + 1)
@@ -258,17 +301,17 @@ def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
             if pad:
                 keys = jnp.concatenate(
                     [keys, jnp.zeros((pad,) + keys.shape[1:], keys.dtype)])
-            client = {k: v[sel] for k, v in arrays.items()}
-            out = step(params, client, arrays["features"], hist1, age,
-                       ghost_feat, prev_loss, sel, tau, fanouts, eoff, keys,
-                       w, *bkt)
+            out = step(params, arrays, gsrc, hist1, age, ghost_feat,
+                       prev_loss, sel, tau, fanouts, eoff, keys, w, gate,
+                       wdst, wpos, wrecv, *bkt)
             params, hist1, age, ghost_feat, prev_loss, stats = out
             light = {k: stats[k][:m_real] for k in light_stats}
             return (params, hist1, age, ghost_feat, prev_loss, key), light
 
         return jax.lax.scan(round_step,
                             (params, hist1, age, ghost_feat, prev_loss, key),
-                            (sel_stack, fan_stack, w_stack, eoffs))
+                            (sel_stack, fan_stack, w_stack, eoffs, gates,
+                             wb_dst, wb_pos, wb_recv))
 
     return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4, 5))
 
@@ -276,26 +319,61 @@ def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
 def abstract_pod_chunk_args(mesh: Mesh, buckets: GhostBuckets, *,
                             n_clients: int, cohort: int, n_max: int,
                             g_max: int, n_feat: int, n_classes: int,
-                            max_deg: int = 16, rounds: int = 1):
-    """ShapeDtypeStructs matching ``build_pod_sharded_chunk``'s signature —
-    ``sharding.fed.abstract_chunk_args`` (same argument order, same client
-    arrays) with the four table leaves re-struck: padded to
-    ``buckets.n_clients_padded`` rows and carrying ``P("pods")``
-    NamedShardings. The ``--pods`` dry-run path."""
-    from repro.models.gcn import HIDDEN
+                            max_deg: int = 16, rounds: int = 1,
+                            wb_cap: Optional[int] = None):
+    """ShapeDtypeStructs matching ``build_pod_sharded_chunk``'s signature:
+    the four tables, the static client arrays, and the ghost-source table
+    all padded to ``buckets.n_clients_padded`` rows with ``P("pods")``
+    NamedShardings; cohort stacks, sync gates, and write-back routing
+    replicated. ``wb_cap`` fixes the bucket capacity (default: the
+    worst-case pow2(cohort / P) — every slice row owned by one pod). The
+    ``--pods`` dry-run path."""
+    from repro.models.gcn import HIDDEN, gcn_init
 
-    from repro.sharding.fed import abstract_chunk_args
-
-    base = list(abstract_chunk_args(
-        mesh, n_clients=n_clients, cohort=cohort, n_max=n_max, g_max=g_max,
-        n_feat=n_feat, n_classes=n_classes, max_deg=max_deg, rounds=rounds))
+    P_ = mesh.shape[POD_AXIS]
     t = NamedSharding(mesh, P(POD_AXIS))
+    r = NamedSharding(mesh, P())
     Kp, n_tot = buckets.n_clients_padded, n_max + g_max
-    base[1] = jax.ShapeDtypeStruct((Kp, n_tot, HIDDEN[0]), jnp.float32,
-                                   sharding=t)           # hist1
-    base[2] = jax.ShapeDtypeStruct((Kp, n_tot), jnp.int32, sharding=t)  # age
-    base[3] = jax.ShapeDtypeStruct((Kp, g_max, n_feat), jnp.float32,
-                                   sharding=t)           # ghost features
-    base[4] = jax.ShapeDtypeStruct((Kp, n_max), jnp.float32,
-                                   sharding=t)           # prev loss
-    return tuple(base)
+    if wb_cap is None:
+        msl = max(1, cohort // P_)
+        wb_cap = 1 << (msl - 1).bit_length()
+
+    def ts(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=t)
+
+    def rs(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=r)
+
+    params = jax.eval_shape(
+        lambda: gcn_init(jax.random.PRNGKey(0), n_feat, n_classes))
+    params = jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=r),
+        params)
+    arrays = {
+        "features": ts((Kp, n_max, n_feat), jnp.float32),
+        "labels": ts((Kp, n_max), jnp.int32),
+        "node_mask": ts((Kp, n_max), jnp.float32),
+        "train_mask": ts((Kp, n_max), jnp.float32),
+        "nbr_idx": ts((Kp, n_max, max_deg), jnp.int32),
+        "nbr_mask": ts((Kp, n_max, max_deg), jnp.float32),
+        "ghost_mask": ts((Kp, g_max), jnp.float32),
+    }
+    return (
+        params,
+        ts((Kp, n_tot, HIDDEN[0]), jnp.float32),   # hist1
+        ts((Kp, n_tot), jnp.int32),                # age
+        ts((Kp, g_max, n_feat), jnp.float32),      # ghost features
+        ts((Kp, n_max), jnp.float32),              # prev loss
+        rs((2,), jnp.uint32),                      # PRNG key chain head
+        arrays,
+        ts((Kp, g_max, n_feat), jnp.float32),      # gsrc (static ghost feats)
+        rs((rounds, cohort), jnp.int32),           # sel_stack
+        rs((rounds, cohort), jnp.int32),           # fan_stack
+        rs((rounds, cohort), jnp.float32),         # w_stack
+        rs((rounds,), jnp.int32),                  # eoffs
+        rs((), jnp.int32),                         # tau
+        rs((rounds,), jnp.bool_),                  # sync gates
+        rs((rounds, cohort), jnp.int32),           # wb_dst
+        rs((rounds, cohort), jnp.int32),           # wb_pos
+        rs((rounds, P_, P_, wb_cap), jnp.int32),   # wb_recv
+    )

@@ -218,3 +218,100 @@ def test_serve_validator_is_pure():
     snapshot = copy.deepcopy(p)
     validate_bench_serve(p)
     assert p == snapshot
+
+
+# ---------------------------------------------------------------------------
+# fed_dryrun placement-ledger schema guard (repro.launch.fed_dryrun)
+# ---------------------------------------------------------------------------
+
+from repro.launch.fed_dryrun import (  # noqa: E402
+    assert_k_flat,
+    pod_placement_ledger,
+    synthetic_ghost_buckets,
+    validate_fed_dryrun,
+)
+
+
+def dryrun_result(clients=16, rpp_scale=1):
+    """A --pods dry-run result row built from the real ledger function over
+    a synthetic topology (no XLA lowering needed)."""
+    b = synthetic_ghost_buckets(clients, 8, 4, 2)
+    ledger = pod_placement_ledger(b, n_pods=2, cohort_pad=8, wb_cap=4,
+                                  n_max=8, g_max=4, n_feat=8, n_classes=3,
+                                  tau=8, local_epochs=4)
+    ledger["all_to_all_bytes"] = 1000
+    ledger["all_gather_bytes"] = 500
+    return {
+        "status": "ok", "arch": "fedgcn-graphsage", "mesh": "host",
+        "chips": 8, "clients": clients, "cohort": 8,
+        "collectives": {"all-gather": 500, "all-reduce": 2000},
+        "roofline": {}, "pods": ledger,
+    }
+
+
+def test_good_dryrun_result_validates():
+    assert validate_fed_dryrun(dryrun_result()) == []
+    # non-pods rows (client-sharded mode) validate without a ledger
+    r = dryrun_result()
+    del r["pods"]
+    assert validate_fed_dryrun(r) == []
+
+
+def test_dryrun_missing_keys_and_types():
+    assert validate_fed_dryrun([]) != []
+    r = dryrun_result()
+    del r["collectives"]
+    assert any("collectives" in e for e in validate_fed_dryrun(r))
+    r = dryrun_result()
+    del r["pods"]["sync"]
+    assert any("sync" in e for e in validate_fed_dryrun(r))
+    r = dryrun_result()
+    r["pods"]["per_device_resident_bytes"]["k_sharded"]["hist1"] = -1
+    assert any("hist1" in e for e in validate_fed_dryrun(r))
+    r = dryrun_result()
+    r["pods"]["per_round_collective_bytes"]["cohort_scaled"] = {}
+    assert any("cohort_scaled" in e for e in validate_fed_dryrun(r))
+
+
+def test_dryrun_sync_contract_enforced():
+    r = dryrun_result()
+    r["pods"]["sync"]["sync_fraction"] = 1.5
+    assert any("sync_fraction" in e for e in validate_fed_dryrun(r))
+    r = dryrun_result()
+    r["pods"]["sync"]["non_sync_round_ghost_bytes"] = 8
+    assert any("non_sync" in e for e in validate_fed_dryrun(r))
+    r = dryrun_result()
+    r["pods"]["sync"]["ghost_all_to_all_effective_bytes"] += 1
+    assert any("effective" in e for e in validate_fed_dryrun(r))
+
+
+def test_dryrun_validator_is_pure():
+    r = dryrun_result()
+    snapshot = copy.deepcopy(r)
+    validate_fed_dryrun(r)
+    assert r == snapshot
+
+
+def test_assert_k_flat_passes_on_scaled_ledgers():
+    """Two ledgers that differ only in K: replicated/cohort columns are
+    byte-identical by construction and k_sharded is linear in K/P."""
+    a, b = dryrun_result(clients=16), dryrun_result(clients=64)
+    assert a["pods"]["table_shard_rows_per_pod"] \
+        != b["pods"]["table_shard_rows_per_pod"]
+    assert assert_k_flat(a, b) == []
+
+
+def test_assert_k_flat_catches_k_scaling():
+    a, b = dryrun_result(clients=16), dryrun_result(clients=64)
+    b["pods"]["per_device_resident_bytes"]["replicated"]["params"] += 4
+    assert any("replicated.params" in e for e in assert_k_flat(a, b))
+    a, b = dryrun_result(clients=16), dryrun_result(clients=64)
+    b["pods"]["per_round_collective_bytes"]["cohort_scaled"][
+        "fetch_psum_tables"] *= 2
+    assert any("fetch_psum_tables" in e for e in assert_k_flat(a, b))
+    a, b = dryrun_result(clients=16), dryrun_result(clients=64)
+    b["pods"]["per_device_resident_bytes"]["k_sharded"]["hist1"] += 4
+    assert any("k_sharded.hist1" in e for e in assert_k_flat(a, b))
+    a, b = dryrun_result(clients=16), dryrun_result(clients=64)
+    b["collectives"]["all-gather"] *= 3
+    assert any("all-gather" in e for e in assert_k_flat(a, b))

@@ -190,6 +190,37 @@ def test_add_nodes_invalidates_one_hop(trained):
     assert np.isfinite(logits).all()
 
 
+def test_add_nodes_grows_capacity_and_rewarms(trained):
+    """An insert past the store's allocation grows the device mirrors in
+    place (old cache rows bit-preserved), lands the feature write AFTER the
+    growth, and re-warms the bucket shapes so no later query traces."""
+    model, engine = restore_engine(trained)
+    baseline = engine.warmup()
+    cap0 = model.store.capacity
+    h1_before = np.asarray(model.h1)[: model.n_active].copy()
+    n_new = cap0 - model.n_active + 3
+    rng = np.random.default_rng(1)
+    feats = rng.standard_normal(
+        (n_new, model.store.n_features)).astype(np.float32)
+    ids, _ = engine.add_nodes(feats)
+    assert model.store.n_grows == 1 and model.store.capacity > cap0
+    # every device/host mirror tracks the new capacity
+    cap = model.store.capacity
+    assert model.feat.shape[0] == model.h1.shape[0] == cap
+    assert len(model.valid) == len(model.row_version) == cap
+    # the post-growth feature scatter landed (old capacity would drop it)
+    assert np.array_equal(np.asarray(model.feat)[ids], feats)
+    # the warm cache survived the reallocation bit-for-bit
+    assert np.array_equal(np.asarray(model.h1)[: len(h1_before)], h1_before)
+    # re-warm happened, and the post-growth shapes are now compile-stable
+    assert engine.trace_count_after_warmup > baseline
+    rewarmed = engine.trace_count
+    engine.query(ids[:2], policy="historical")
+    engine.query(ids, policy="fresh")
+    engine.refresh()
+    assert engine.trace_count == rewarmed, "post-growth query traced"
+
+
 def test_refresh_restores_fresh_historical_agreement(trained):
     model, engine = restore_engine(trained)
     u, v = pick_nonadjacent(model.store)
@@ -241,14 +272,45 @@ def make_store(n=6, d=3, f=4, **kw):
 
 
 def test_store_capacity_and_headroom():
-    s = make_store(n=6, capacity=8)
+    s = make_store(n=6, capacity=8, max_capacity=8)
     assert s.capacity == 8
     s.add_nodes(np.zeros((2, 4)))
-    with pytest.raises(CapacityError, match="full"):
+    with pytest.raises(CapacityError, match="hard cap"):
         s.add_nodes(np.zeros((1, 4)))
     with pytest.raises(ValueError, match="capacity"):
         make_store(n=6, capacity=3)
+    with pytest.raises(ValueError, match="max_capacity"):
+        make_store(n=6, capacity=8, max_capacity=7)
+    with pytest.raises(ValueError, match="growth"):
+        make_store(n=6, growth=1.0)
     assert make_store(n=100).capacity >= 164      # default headroom floor
+
+
+def test_store_geometric_growth():
+    s = make_store(n=6, capacity=8)
+    assert s.max_capacity is None
+    # past headroom: grows geometrically instead of raising
+    s.add_nodes(np.zeros((4, 4)))
+    assert s.n_active == 10
+    assert s.capacity == 12                       # ceil(8 * 1.5)
+    assert s.n_grows == 1
+    # a burst larger than one growth step lands in a single reallocation
+    ids, _ = s.add_nodes(np.arange(25 * 4, dtype=np.float32).reshape(25, 4))
+    assert s.n_active == 35 and s.capacity == 35 and s.n_grows == 2
+    np.testing.assert_array_equal(
+        s.features[ids],
+        np.arange(25 * 4, dtype=np.float32).reshape(25, 4))
+    # growth preserves existing adjacency and zeroes the new headroom
+    assert s.nbr_idx.shape == (35, 3) and not s.nbr_mask[10:].any()
+
+
+def test_store_growth_respects_hard_cap():
+    s = make_store(n=6, capacity=8, max_capacity=10)
+    s.add_nodes(np.zeros((3, 4)))                 # grows, clamped to the cap
+    assert s.capacity == 10 and s.n_grows == 1
+    with pytest.raises(CapacityError, match="hard cap"):
+        s.add_nodes(np.zeros((2, 4)))
+    assert s.n_active == 9                        # failed insert left no rows
 
 
 def test_store_edge_semantics():

@@ -79,6 +79,19 @@ def test_sharded_matches_unsharded_weighted(small_fed):
     _assert_allclose_history(res_u, res_s)
 
 
+@needs_devices
+def test_sharded_pairwise_merge_parity(small_fed):
+    """merge_reduce='pairwise' on the 1-D client mesh: the fixed fp32
+    binary-tree merge is a drop-in for the weighted psum within the same
+    allclose contract (the knob the pod mesh already honors)."""
+    g, fed = small_fed
+    _, res_u = _run(g, fed, m=4)
+    eng_s, res_s = _run(g, fed, mesh=make_client_mesh(2), m=4,
+                        merge_reduce="pairwise")
+    assert eng_s.last_executor == "sharded_fused"
+    _assert_allclose_history(res_u, res_s)
+
+
 def test_single_device_mesh_matches(small_fed):
     """A 1-device mesh still routes through shard_map (runs in the plain
     tier-1 lane too, so the sharded code path has everyday coverage)."""

@@ -16,9 +16,12 @@ from hypcompat import given, settings, st
 from repro.api import FedAvg, FedEngine, method_config
 from repro.core.historical import pull_ghosts, pull_ghosts_prefetched
 from repro.federated.partition import (
+    exchange_ghost_features,
     ghost_exchange_buckets,
     pod_table_padding,
     simulate_ghost_exchange,
+    simulate_writeback_exchange,
+    writeback_routing,
 )
 from repro.sharding.fed import CLIENT_AXIS, cohort_padding, make_client_mesh
 from repro.sharding.tables import (
@@ -27,6 +30,7 @@ from repro.sharding.tables import (
     pad_tables_to_pods,
     pairwise_sum,
     pod_axes_of,
+    sync_round_gates,
 )
 
 pytestmark = pytest.mark.sharded
@@ -116,6 +120,155 @@ def test_cohort_and_table_padding_invariants(m, n_shards):
 
 
 # ---------------------------------------------------------------------------
+# write-back routing properties (satellite: hypothesis via hypcompat)
+# ---------------------------------------------------------------------------
+
+def random_cohorts(seed, S, n_pods, n_shards, mL, rpp, dummy_frac=0.3):
+    """(S, m) padded cohorts: duplicate-free real ids in [0, Kp) plus a
+    trailing block of out-of-range dummies (the cohort-padding contract)."""
+    rng = np.random.default_rng(seed)
+    m = n_pods * n_shards * mL
+    Kp = n_pods * rpp
+    sel = np.zeros((S, m), np.int32)
+    for s in range(S):
+        n_real = max(1, int(m * (1 - dummy_frac)))
+        n_real = min(n_real, Kp)              # without-replacement sampling
+        sel[s, :n_real] = rng.permutation(Kp)[:n_real]
+        sel[s, n_real:] = Kp + rng.integers(0, 3, m - n_real)
+    return sel, Kp
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 3), st.integers(1, 4), st.integers(1, 6))
+def test_writeback_every_real_entry_in_exactly_one_bucket(
+        seed, S, n_pods, n_shards, mL, rpp):
+    """Every real (src-slice, owner-row) cohort entry lands in exactly one
+    send-bucket slot — in its SOURCE pod's bucket for the OWNER pod — with
+    positions forming a gap-free prefix; dummies get the sentinel dst and
+    every unused recv slot keeps the drop sentinel."""
+    sel, Kp = random_cohorts(seed, S, n_pods, n_shards, mL, rpp)
+    plan = writeback_routing(sel, n_pods, n_shards, rpp)
+    m = sel.shape[1]
+    src = np.arange(m) // (m // n_pods)
+    real_slots = 0
+    for s in range(S):
+        occupied = set()
+        occ = np.zeros((n_pods, n_pods), np.int64)
+        for i in range(m):
+            k = int(sel[s, i])
+            if k >= Kp:
+                assert plan.dst[s, i] == n_pods      # dummy: sentinel dst
+                continue
+            q = int(plan.dst[s, i])
+            assert q == k // rpp                      # routed to the owner
+            slot = (int(src[i]), q, int(plan.pos[s, i]))
+            assert slot not in occupied               # exactly one slot each
+            occupied.add(slot)
+            occ[src[i], q] += 1
+            # the recv side inverts to the owner-local table row
+            assert plan.recv[s, q, src[i], plan.pos[s, i]] == k - q * rpp
+        # positions are a gap-free prefix of each (src, dst) bucket
+        for p in range(n_pods):
+            for q in range(n_pods):
+                got = sorted(pos for (sp, dq, pos) in occupied
+                             if (sp, dq) == (p, q))
+                assert got == list(range(occ[p, q]))
+        real_slots += len(occupied)
+    assert plan.max_occupancy <= plan.cap
+    assert plan.cap & (plan.cap - 1) == 0             # pow2 shape stability
+    assert int((plan.recv < rpp).sum()) == real_slots  # all else = sentinel
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 3), st.integers(1, 4), st.integers(1, 6))
+def test_writeback_roundtrip_matches_dense_scatter(
+        seed, S, n_pods, n_shards, mL, rpp):
+    """Bucket scatter -> simulated all-to-all -> shard scatter must equal
+    the dense ``table[sel[i]] = values[i]`` bit-for-bit for every real id,
+    leaving rows dummies point past (and untouched rows) inert."""
+    sel, Kp = random_cohorts(seed, S, n_pods, n_shards, mL, rpp)
+    plan = writeback_routing(sel, n_pods, n_shards, rpp)
+    rng = np.random.default_rng(seed + 1)
+    m = sel.shape[1]
+    for s in range(S):
+        table = rng.normal(size=(Kp, 3)).astype(np.float32)
+        values = rng.normal(size=(m, 3)).astype(np.float32)
+        ref = table.copy()
+        for i in range(m):
+            if sel[s, i] < Kp:
+                ref[sel[s, i]] = values[i]
+        got = simulate_writeback_exchange(plan, s, values, table)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_writeback_routing_validation():
+    sel = np.zeros((1, 6), np.int32)
+    with pytest.raises(ValueError, match="split"):
+        writeback_routing(sel, 4, 1, 2)               # 6 % 4 != 0
+    # contiguous ids: each pod-row's slice routes entirely within-pod
+    plan = writeback_routing(np.arange(8, dtype=np.int32)[None], 2, 1, 4)
+    assert plan.max_occupancy == 4 and plan.cap == 4
+    # interleaved ids split every slice across both pods
+    inter = np.arange(8, dtype=np.int32).reshape(4, 2).T.reshape(-1)
+    plan = writeback_routing(inter[None], 2, 1, 4)
+    assert plan.max_occupancy == 2 and plan.cap == 2
+    with pytest.raises(ValueError, match="cap"):
+        writeback_routing(np.arange(8, dtype=np.int32)[None], 2, 1, 4, cap=2)
+
+
+def test_exchange_ghost_features_matches_pull_gf():
+    """The static layer-0 owner exchange equals the gf half of pull_ghosts
+    for every real client, zeros on pod-padding rows."""
+    K, n_max, g_max, n_pods = 7, 5, 3, 3
+    go, gr, gm = random_topology(4, K, g_max, n_max)
+    b = ghost_exchange_buckets(go, gr, gm, n_pods)
+    feats_all = np.random.default_rng(5).normal(
+        size=(K, n_max, 2)).astype(np.float32)
+    gsrc = exchange_ghost_features(b, feats_all)
+    assert gsrc.shape == (b.n_clients_padded, g_max, 2)
+    assert gsrc.dtype == np.float32
+    ref = np.where(gm[..., None] > 0, feats_all[np.maximum(go, 0), gr], 0.0)
+    np.testing.assert_array_equal(gsrc[:K], ref)
+    np.testing.assert_array_equal(gsrc[K:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# sync-round gating (the tau-schedule predicate the ghost a2a hangs on)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(0, 12),
+       st.integers(1, 6))
+def test_sync_round_gates_matches_per_epoch_do_sync(seed, S, tau, J):
+    """A round's gate is True iff ANY of its J local epochs satisfies
+    LocalUpdate's per-epoch predicate (epoch_offset + j) % tau == 0 — the
+    host-derivable condition under which gating off the ghost exchange is
+    lossless."""
+    rng = np.random.default_rng(seed)
+    eoffs = rng.integers(0, 64, size=S).astype(np.int64)
+    gates = sync_round_gates(eoffs, tau, J)
+    assert gates.shape == (S,) and gates.dtype == np.bool_
+    for s in range(S):
+        want = any((int(eoffs[s]) + j) % max(tau, 1) == 0 for j in range(J))
+        assert bool(gates[s]) == want
+    assert not sync_round_gates(eoffs, tau, J, enabled=False).any()
+
+
+def test_sync_round_gates_tau8_alternates():
+    """The README ledger's headline schedule: tau=8 with J=4 local epochs
+    syncs on every other round (fraction exactly 0.5)."""
+    eoffs = np.arange(16) * 4                         # consecutive rounds
+    gates = sync_round_gates(eoffs, 8, 4)
+    np.testing.assert_array_equal(gates, np.arange(16) % 2 == 0)
+    assert float(gates.mean()) == 0.5
+    # tau <= 1 syncs every epoch of every round
+    assert sync_round_gates(eoffs, 1, 4).all()
+    assert sync_round_gates(eoffs, 0, 4).all()
+
+
+# ---------------------------------------------------------------------------
 # plain unit coverage of the same invariants (runs without hypothesis too)
 # ---------------------------------------------------------------------------
 
@@ -131,6 +284,25 @@ def test_bucket_roundtrip_cases(seed, K, g_max, n_pods):
     sim = simulate_ghost_exchange(b, hist1_all)
     ref = np.where(gm[..., None] > 0, hist1_all[np.maximum(go, 0), gr], 0.0)
     np.testing.assert_array_equal(sim[:K], ref)
+
+
+@pytest.mark.parametrize("seed,n_pods,n_shards,mL,rpp",
+                         [(0, 2, 1, 2, 3), (1, 3, 2, 1, 4),
+                          (2, 1, 1, 4, 2), (3, 4, 1, 2, 1)])
+def test_writeback_roundtrip_cases(seed, n_pods, n_shards, mL, rpp):
+    sel, Kp = random_cohorts(seed, 2, n_pods, n_shards, mL, rpp)
+    plan = writeback_routing(sel, n_pods, n_shards, rpp)
+    rng = np.random.default_rng(seed + 1)
+    m = sel.shape[1]
+    for s in range(2):
+        table = rng.normal(size=(Kp, 2)).astype(np.float32)
+        values = rng.normal(size=(m, 2)).astype(np.float32)
+        ref = table.copy()
+        for i in range(m):
+            if sel[s, i] < Kp:
+                ref[sel[s, i]] = values[i]
+        np.testing.assert_array_equal(
+            simulate_writeback_exchange(plan, s, values, table), ref)
 
 
 def test_ghost_buckets_validate_pod_count():
