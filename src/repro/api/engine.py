@@ -90,6 +90,14 @@ from repro.api.registry import (
 )
 from repro.core.fedais import MethodConfig, batch_size_for, make_vmapped_update
 from repro.core.historical import init_historical
+from repro.faults import (
+    FaultCounters,
+    FaultPlan,
+    UpdateGuard,
+    build_faulty_chunk,
+    corrupt_params_stack,
+    guard_mask,
+)
 from repro.federated.costs import CostMeter, DelayModel
 from repro.federated.partition import (
     FederatedGraph,
@@ -178,6 +186,9 @@ class EngineState:
     # sync paths, where merge order == dispatch order by construction);
     # strategies read it to attribute async rewards to dispatch versions
     last_staleness: Optional[np.ndarray] = None
+    # what the engine/scheduler did about faults (dropped uploads,
+    # quarantined updates, async timeouts/retries/evictions, ...)
+    fault_events: FaultCounters = field(default_factory=FaultCounters)
 
 
 def _client_slice(arrays: dict, ids: np.ndarray) -> dict:
@@ -217,6 +228,8 @@ class FedEngine:
         client_sharding: str = "auto",
         table_sharding: str = "auto",
         merge_reduce: str = "psum",
+        faults: Optional[FaultPlan] = None,
+        guard: Union[UpdateGuard, bool, None] = True,
     ):
         self.graph, self.fed = graph, fed
         self.mcfg = method_config(method) if isinstance(method, str) else method
@@ -293,8 +306,32 @@ class FedEngine:
             raise ValueError(
                 "table_sharding='pods' needs a mesh with ('pods', 'clients') "
                 f"axes; got {None if mesh is None else tuple(mesh.shape)}")
-        # "stepwise"|"fused"|"sharded_fused"|"pod_sharded"
+        # "stepwise"|"fused"|"fused_faulty"|"sharded_fused"|"pod_sharded"
         self.last_executor: Optional[str] = None
+
+        # ---- fault injection + merge guard (repro.faults) ----
+        # `faults` is a seeded FaultPlan; an empty plan (or None) is inert
+        # by contract — every fault branch below gates on the plan actually
+        # firing, so empty-plan runs stay bit-identical to pre-fault code.
+        # `guard` is the merge-side finite/norm admission rule: True (the
+        # default) checks finiteness only, an UpdateGuard instance adds a
+        # delta-norm ceiling, False/None disables guarding entirely (and
+        # lets a poisoned update NaN the merge — explicit opt-out).
+        if faults is not None and not isinstance(faults, FaultPlan):
+            raise ValueError(f"faults must be a FaultPlan or None, got "
+                             f"{type(faults).__name__}")
+        self.faults = faults
+        self._faults_active = faults is not None and not faults.empty
+        if guard is True:
+            self._guard: Optional[UpdateGuard] = UpdateGuard()
+        elif guard is False or guard is None:
+            self._guard = None
+        elif isinstance(guard, UpdateGuard):
+            self._guard = guard
+        else:
+            raise ValueError("guard must be an UpdateGuard, True (finite "
+                             f"check only) or False/None, got {guard!r}")
+        self._faulty_chunk = None           # built lazily under a live plan
 
         # ---- static geometry + compiled LocalUpdate ----
         self.F, self.H1 = fed.n_features, HIDDEN[0]
@@ -370,48 +407,89 @@ class FedEngine:
         cost accounting, strategy/callback hooks. Async schedulers pass the
         per-update ``staleness`` (for discounted weights), a staleness-aware
         ``aggregator``, and the virtual-clock ``wall_clock_s`` actually
-        waited (overriding the lockstep max(compute)+sync billing). Returns
-        True if a callback requested stop."""
+        waited (overriding the lockstep max(compute)+sync billing).
+
+        When an ``UpdateGuard`` is configured (the default), every arriving
+        update must be finite (and inside the guard's delta-norm ceiling)
+        to aggregate or write back its historical rows; failures are
+        quarantined — counted in ``state.fault_events.n_quarantined``,
+        never averaged in. An all-pass guard takes the original unfiltered
+        code path, so guarded healthy runs stay bit-identical to unguarded
+        ones. A merge left with no survivor (everyone dropped out or was
+        quarantined) is a server no-op round: params and tables carry over
+        unchanged. Returns True if a callback requested stop."""
         state.round = t
-        sel_j = jnp.asarray(sel)
         new_params_stack, new_hist1, new_age, new_ghost_feat, stats = out
 
-        agg = self.aggregator if aggregator is None else aggregator
-        weights = jnp.asarray(self.fed.client_sizes[sel], jnp.float32)
-        if staleness is None:
-            state.params = agg.aggregate(new_params_stack, weights)
-        else:
-            state.params = agg.aggregate(new_params_stack, weights, staleness)
+        # cost/post_round observe the FULL pre-guard cohort below: the
+        # client work and its upload happened even when the merge refuses
+        # the update (identical to the pre-guard path when nothing fires)
+        full_sel, full_stats, full_staleness = np.asarray(sel), stats, staleness
+        if self._guard is not None and len(full_sel):
+            ok = guard_mask(new_params_stack, state.params,
+                            self._guard.max_norm)
+            if not ok.all():
+                state.fault_events.n_quarantined += int((~ok).sum())
+                keep = np.flatnonzero(ok)
+                sel = full_sel[keep]
+                if staleness is not None:
+                    staleness = np.asarray(staleness)[keep]
+                (new_params_stack, new_hist1, new_age, new_ghost_feat,
+                 stats) = jax.tree_util.tree_map(
+                    lambda x: x[keep],
+                    (new_params_stack, new_hist1, new_age, new_ghost_feat,
+                     stats))
 
-        # Only an async buffer can merge the same client twice (re-selected
-        # while its previous update was still in flight): every update
-        # aggregates, but the client-state write-back keeps only the freshest
-        # entry (``sel`` arrives sorted by dispatch version, so the last
-        # occurrence wins). Sync cohorts are sampled without replacement and
-        # never duplicated, so they skip the host np.unique + fancy-index
-        # round-trip entirely (``staleness is None`` marks the sync path).
-        if staleness is not None and len(np.unique(sel)) != len(sel):
-            _, last_rev = np.unique(np.asarray(sel)[::-1], return_index=True)
-            w = np.sort(len(sel) - 1 - last_rev)
-            sel_j = jnp.asarray(np.asarray(sel)[w])
-            new_hist1, new_age = new_hist1[w], new_age[w]
-            new_ghost_feat, loss_all = new_ghost_feat[w], stats["loss_all"][w]
+        if len(sel) == 0:
+            # every update dropped out or was quarantined: server no-op
+            state.fault_events.n_empty_merges += 1
         else:
-            loss_all = stats["loss_all"]
-        state.hist = state.hist._replace(
-            hist1=state.hist.hist1.at[sel_j].set(new_hist1),
-            age=state.hist.age.at[sel_j].set(new_age),
-        )
-        state.ghost_feat = state.ghost_feat.at[sel_j].set(new_ghost_feat)
-        state.prev_loss = state.prev_loss.at[sel_j].set(loss_all)
+            sel_j = jnp.asarray(sel)
+            agg = self.aggregator if aggregator is None else aggregator
+            weights = jnp.asarray(self.fed.client_sizes[sel], jnp.float32)
+            if staleness is None:
+                state.params = agg.aggregate(new_params_stack, weights)
+            else:
+                state.params = agg.aggregate(new_params_stack, weights,
+                                             staleness)
 
-        cost = self.cost_model.round_cost(self, state, sel, stats)
+            # Only an async buffer can merge the same client twice
+            # (re-selected while its previous update was still in flight):
+            # every update aggregates, but the client-state write-back keeps
+            # only the freshest entry (``sel`` arrives sorted by dispatch
+            # version, so the last occurrence wins). Sync cohorts are
+            # sampled without replacement and never duplicated, so they skip
+            # the host np.unique + fancy-index round-trip entirely
+            # (``staleness is None`` marks the sync path).
+            if staleness is not None and len(np.unique(sel)) != len(sel):
+                _, last_rev = np.unique(np.asarray(sel)[::-1],
+                                        return_index=True)
+                w = np.sort(len(sel) - 1 - last_rev)
+                sel_j = jnp.asarray(np.asarray(sel)[w])
+                new_hist1, new_age = new_hist1[w], new_age[w]
+                new_ghost_feat = new_ghost_feat[w]
+                loss_all = stats["loss_all"][w]
+            else:
+                loss_all = stats["loss_all"]
+            state.hist = state.hist._replace(
+                hist1=state.hist.hist1.at[sel_j].set(new_hist1),
+                age=state.hist.age.at[sel_j].set(new_age),
+            )
+            state.ghost_feat = state.ghost_feat.at[sel_j].set(new_ghost_feat)
+            state.prev_loss = state.prev_loss.at[sel_j].set(loss_all)
+
+        if len(full_sel):
+            cost = self.cost_model.round_cost(self, state, full_sel,
+                                              full_stats)
+        else:
+            cost = CostMeter()          # nothing arrived, nothing billed
         if wall_clock_s is not None:
             cost.wall_clock_s = wall_clock_s    # overlapped (virtual-clock) billing
         state.result.costs.add(cost)
-        state.last_staleness = staleness
+        state.last_staleness = full_staleness   # aligned with full_sel
         try:
-            self.strategy.post_round(self, state, sel, stats)
+            if len(full_sel):
+                self.strategy.post_round(self, state, full_sel, full_stats)
         finally:
             state.last_staleness = None
 
@@ -427,7 +505,41 @@ class FedEngine:
         state.round = t
         sel = self.selector.select(self, state)
         out = self.dispatch(state, sel, t)
-        return self.merge(state, t, sel, out)
+        wall = None
+        if self._faults_active:
+            sel, out, wall = self._inject_faults(state, t, sel, out)
+        return self.merge(state, t, sel, out, wall_clock_s=wall)
+
+    def _inject_faults(self, state: EngineState, t: int, sel, out):
+        """Apply the FaultPlan between dispatch and merge (the stepwise
+        sync path): corrupt the marked members' uploaded params (the merge
+        guard quarantines them), drop lost members' uploads entirely, and
+        re-bill the round's wall clock with straggler delay factors (the
+        lockstep server waits for every dispatched member, stragglers
+        included, but the merge overhead ``o`` is priced from the
+        survivors — dropped uploads never reach the server).
+        Returns (surviving_sel, filtered_out, wall_override)."""
+        plan = self.faults
+        sel = np.asarray(sel)
+        full_sel, full_stats = sel, out[-1]
+        cmask = plan.corruptions(t, sel)
+        if cmask.any():
+            out = (corrupt_params_stack(out[0], cmask, plan.corrupt_value()),
+                   ) + tuple(out[1:])
+        drop = plan.drops(t, sel)
+        if drop.any():
+            state.fault_events.n_dropped += int(drop.sum())
+            keep = np.flatnonzero(~drop)
+            sel = sel[keep]
+            out = jax.tree_util.tree_map(lambda x: x[keep], out)
+        wall = None
+        if plan.straggler_frac > 0.0:
+            times = np.asarray(self.cost_model.client_compute_times(
+                self, state, full_sel, full_stats), np.float64)
+            times = times * plan.delay_factors(full_sel)
+            o = self.cost_model.sync_overhead(self, sel, out[-1])
+            wall = float(np.max(times)) + o / max(state.tau, 1)
+        return sel, out, wall
 
     # ------------------------------------------------------------------
     # fused executor (the SyncScheduler hot path)
@@ -467,6 +579,15 @@ class FedEngine:
                            type(cb) in _FUSED_SAFE_CALLBACKS):
                 return False, (f"callback {type(cb).__name__} may observe "
                                "per-round state (not fused_safe)")
+        if self._faults_active:
+            # the fault-aware fused chunk lowers aggregation to a hardcoded
+            # masked weighted mean (like the sharded executors); a custom
+            # merge rule must take the stepwise path, which supports the
+            # full fault plan through dispatch/merge
+            why = self._allreduce_unsafe_reason()
+            if why:
+                return False, ("fault-aware fused chunk needs a mean-family "
+                               "merge: " + why)
         return True, ""
 
     def sharded_eligibility(self, m: int | None = None) -> tuple[bool, str]:
@@ -491,6 +612,9 @@ class FedEngine:
         why = self._allreduce_unsafe_reason()
         if why:
             return False, why
+        why = self._sharded_faults_unsafe_reason()
+        if why:
+            return False, why
         if m is not None and self.client_sharding == "divisible":
             shards = self.mesh.shape[self.client_axis]
             if m % shards:
@@ -498,6 +622,17 @@ class FedEngine:
                                f"size {shards} (client_sharding='divisible' "
                                "disables padding)")
         return True, ""
+
+    def _sharded_faults_unsafe_reason(self) -> str:
+        """Why the active FaultPlan cannot run on the sharded executors
+        (empty string when it can). Dropout rides the executors' existing
+        zero-weight dummy mechanics; corruption needs the in-trace guard
+        only the fault-aware fused chunk (and the stepwise merge) carry."""
+        if self._faults_active and self.faults.corrupt > 0.0:
+            return ("sharded executors support dropout/straggler faults "
+                    "only; corrupt updates need the fault-aware fused "
+                    "chunk's in-trace guard")
+        return ""
 
     def _allreduce_unsafe_reason(self) -> str:
         """Why the aggregator cannot lower to the sharded executors' merge
@@ -537,6 +672,9 @@ class FedEngine:
         if self.client_sharding == "off":
             return False, "client_sharding='off'"
         why = self._allreduce_unsafe_reason()
+        if why:
+            return False, why
+        why = self._sharded_faults_unsafe_reason()
         if why:
             return False, why
         if m is not None and self.client_sharding == "divisible":
@@ -580,13 +718,17 @@ class FedEngine:
 
         return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4, 5))
 
-    def _call_sharded_chunk(self, state: EngineState, sels, fans, eoffs):
+    def _call_sharded_chunk(self, state: EngineState, sels, fans, eoffs,
+                            drop_stack=None):
         """Run one chunk through the shard-mapped executor
         (repro.sharding.fed.build_sharded_chunk): pad ragged cohorts with
         zero-weight dummy clients, derive per-client aggregation weights
         from the aggregator's semantics (client sizes for WeightedFedAvg,
         uniform for FedAvg), and hand the donated buffers — committed to
-        the mesh fully replicated — to the scanned sharded round_step."""
+        the mesh fully replicated — to the scanned sharded round_step.
+        ``drop_stack`` (FaultPlan dropout) turns dropped members into
+        zero-weight out-of-range dummies: the same mechanics as ragged
+        padding, so their merge weight and write-back vanish exactly."""
         mesh, axis = self.mesh, self.client_axis
         m = len(sels[0])
         if self._sharded_chunk is None or self._sharded_chunk_m != m:
@@ -598,6 +740,9 @@ class FedEngine:
         sel_stack = np.stack(sels).astype(np.int32)
         fan_stack = np.stack([np.asarray(f) for f in fans])
         w_stack = self._cohort_weights(sel_stack)
+        if drop_stack is not None and drop_stack.any():
+            w_stack[drop_stack] = 0.0
+            sel_stack[drop_stack] = self.fed.n_clients
         if pad:
             # out-of-range id: gathers clamp (dummy trains on real data,
             # harmlessly), scatters drop (its write-back never lands);
@@ -642,7 +787,8 @@ class FedEngine:
                                                     self.mesh)
         return self._pod_static
 
-    def _call_pod_chunk(self, state: EngineState, sels, fans, eoffs):
+    def _call_pod_chunk(self, state: EngineState, sels, fans, eoffs,
+                        drop_stack=None):
         """Run one chunk with every K-sized array sharded over the pod axis
         (repro.sharding.tables.build_pod_sharded_chunk): pad the K axis to
         the pod grid, commit the four tables + static arrays as pod shards,
@@ -672,6 +818,11 @@ class FedEngine:
         sel_stack = np.stack(sels).astype(np.int32)
         fan_stack = np.stack([np.asarray(f) for f in fans])
         w_stack = self._cohort_weights(sel_stack)
+        if drop_stack is not None and drop_stack.any():
+            # dropped members become ownerless dummies (same id as ragged
+            # padding): fetch zero rows, zero merge weight, no write-back
+            w_stack[drop_stack] = 0.0
+            sel_stack[drop_stack] = buckets.n_clients_padded
         if pad:
             sel_stack = np.pad(sel_stack, ((0, 0), (0, pad)),
                                constant_values=buckets.n_clients_padded)
@@ -708,11 +859,48 @@ class FedEngine:
         return ((params, hist1[:K], age[:K], ghost_feat[:K], prev_loss[:K],
                  key), light)
 
+    def _call_faulty_chunk(self, state: EngineState, sels, fans, eoffs,
+                           drop_stack, cmask_stack):
+        """Run one chunk through the fault-aware fused executor
+        (repro.faults.build_faulty_chunk): dropped members get weight 0,
+        corrupted members get a poison multiplier, and the in-trace guard
+        zeroes + counts non-finite/norm-exploded updates — reproducing the
+        stepwise dispatch -> corrupt -> drop -> guarded-merge path inside
+        one scanned XLA call."""
+        if self._faulty_chunk is None:
+            g = self._guard
+            self._faulty_chunk = build_faulty_chunk(
+                self._vm_raw, _LIGHT_STATS,
+                uses_weights=getattr(self.aggregator, "uses_weights", False),
+                finite_guard=g is not None,
+                max_norm=None if g is None else g.max_norm)
+        sel_stack = np.stack(sels).astype(np.int32)
+        w_stack = self._cohort_weights(sel_stack)
+        w_stack[drop_stack] = 0.0
+        cmult_stack = np.ones(sel_stack.shape, np.float32)
+        cmult_stack[cmask_stack] = self.faults.corrupt_value()
+        return self._faulty_chunk(
+            state.params, state.hist.hist1, state.hist.age, state.ghost_feat,
+            state.prev_loss, state.key, state.arrays,
+            jnp.asarray(sel_stack), jnp.stack(fans), jnp.asarray(w_stack),
+            jnp.asarray(cmult_stack), jnp.asarray(eoffs),
+            jnp.asarray(state.tau, jnp.int32))
+
     def _run_chunk(self, state: EngineState, t0: int, n_rounds: int) -> bool:
         """Select cohorts for rounds [t0, t0+n_rounds) on the host, run them
         as ONE donated scanned XLA call, then replay the host tail (cost
         accounting, post_round, callbacks) per round from the streamed
-        stats. Returns True if a callback requested stop."""
+        stats. Returns True if a callback requested stop.
+
+        Under an active FaultPlan, per-round dropout/corruption masks are
+        drawn on the host for the whole chunk (the plan's (round, client)
+        coordinates make them executor-independent) and threaded into the
+        executor: the sharded paths absorb dropout through their
+        zero-weight dummy mechanics, corruption routes to the fault-aware
+        fused chunk (``fused_faulty``), and the replay tail mirrors the
+        stepwise merge's billing — dropped members are billed nothing,
+        stragglers stretch the round's wall clock, survivor-free rounds
+        count as empty merges."""
         sels, fans = [], []
         for t in range(t0, t0 + n_rounds):
             state.round = t
@@ -725,12 +913,27 @@ class FedEngine:
                 "precomputable selectors must return fixed-size cohorts")
         eoffs = np.arange(t0, t0 + n_rounds, dtype=np.int32) * self.mcfg.local_epochs
 
+        drop_stack = cmask_stack = None
+        if self._faults_active:
+            ts = range(t0, t0 + n_rounds)
+            drop_stack = np.stack(
+                [self.faults.drops(t, s) for t, s in zip(ts, sels)])
+            cmask_stack = np.stack(
+                [self.faults.corruptions(t, s) for t, s in zip(ts, sels)])
+            state.fault_events.n_dropped += int(drop_stack.sum())
+
         if self.mesh is not None and self.pod_sharded_eligibility(len(sels[0]))[0]:
             self.last_executor = "pod_sharded"
-            carry, light = self._call_pod_chunk(state, sels, fans, eoffs)
+            carry, light = self._call_pod_chunk(state, sels, fans, eoffs,
+                                                drop_stack=drop_stack)
         elif self.mesh is not None and self.sharded_eligibility(len(sels[0]))[0]:
             self.last_executor = "sharded_fused"
-            carry, light = self._call_sharded_chunk(state, sels, fans, eoffs)
+            carry, light = self._call_sharded_chunk(state, sels, fans, eoffs,
+                                                    drop_stack=drop_stack)
+        elif self._faults_active:
+            self.last_executor = "fused_faulty"
+            carry, light = self._call_faulty_chunk(state, sels, fans, eoffs,
+                                                   drop_stack, cmask_stack)
         else:
             self.last_executor = "fused"
             if self._fused_chunk is None:
@@ -745,12 +948,45 @@ class FedEngine:
         state.hist = state.hist._replace(hist1=hist1, age=age)
 
         light = jax.device_get(light)       # one host transfer per chunk
+        n_quar_rounds = light.pop("n_quarantined", None)
+        if n_quar_rounds is not None:
+            state.fault_events.n_quarantined += int(np.sum(n_quar_rounds))
         for i, t in enumerate(range(t0, t0 + n_rounds)):
             state.round = t
             stats_t = {k: v[i] for k, v in light.items()}
-            state.result.costs.add(
-                self.cost_model.round_cost(self, state, sels[i], stats_t))
-            self.strategy.post_round(self, state, sels[i], stats_t)
+            sel_t, stats_b, wall = sels[i], stats_t, None
+            if self._faults_active:
+                plan = self.faults
+                if drop_stack is not None and drop_stack[i].any():
+                    # dropped uploads never reach the server: bill survivors
+                    keep = np.flatnonzero(~drop_stack[i])
+                    sel_t = sels[i][keep]
+                    stats_b = {k: v[keep] for k, v in stats_t.items()}
+                if plan.straggler_frac > 0.0:
+                    # same formula as the stepwise _inject_faults billing:
+                    # the lockstep server waits for every dispatched member
+                    # (stragglers included; compute times are stats-free in
+                    # PaperCostModel, so the sharded executor's dummy rows
+                    # for dropped members don't leak in), while the merge
+                    # overhead o prices only the survivor uploads
+                    times = np.asarray(self.cost_model.client_compute_times(
+                        self, state, sels[i], stats_t), np.float64)
+                    times = times * plan.delay_factors(sels[i])
+                    o = self.cost_model.sync_overhead(self, sel_t, stats_b)
+                    wall = float(np.max(times)) + o / max(state.tau, 1)
+                n_quar_t = (0 if n_quar_rounds is None
+                            else int(n_quar_rounds[i]))
+                if len(sel_t) - n_quar_t <= 0:
+                    state.fault_events.n_empty_merges += 1
+            if len(sel_t):
+                cost = self.cost_model.round_cost(self, state, sel_t, stats_b)
+            else:
+                cost = CostMeter()
+            if wall is not None:
+                cost.wall_clock_s = wall
+            state.result.costs.add(cost)
+            if len(sel_t):
+                self.strategy.post_round(self, state, sel_t, stats_b)
             ctx = RoundContext(engine=self, state=state, t=t, rounds=self.rounds)
             for cb in self.callbacks:
                 cb.on_round_end(ctx)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults.plan import corrupt_params_stack
 from repro.federated.costs import (
     BYTES_F32,
     CostMeter,
@@ -260,6 +261,10 @@ class CostModel(Protocol):
                              sel: np.ndarray, stats: dict) -> np.ndarray:
         ...
 
+    def client_comm_times(self, engine: "FedEngine", state: "EngineState",
+                          sel: np.ndarray, stats: dict) -> np.ndarray:
+        ...
+
     def sync_overhead(self, engine: "FedEngine", sel: np.ndarray,
                       stats: dict) -> float:
         ...
@@ -304,6 +309,17 @@ class PaperCostModel:
         return np.asarray(
             self.delay.compute_time(self.client_flops(engine, sel, stats)),
             np.float64)
+
+    def client_comm_times(self, engine, state, sel, stats) -> np.ndarray:
+        """Per-client network time this round (seconds, float64): the model
+        down/up-link plus the client's own embedding-sync traffic, priced by
+        the delay model. The AsyncScheduler folds this into per-client
+        finish times when ``comm_factors`` model heterogeneous links —
+        compute heterogeneity alone (``speed_factors``) misses clients on
+        slow networks."""
+        per = 2.0 * model_bytes(engine.n_params) \
+            + self.client_embed_bytes(engine, stats)
+        return np.asarray(self.delay.comm_time(per), np.float64)
 
     def sync_overhead(self, engine, sel, stats) -> float:
         """The per-merge server-side communication overhead ``o`` (seconds);
@@ -405,6 +421,27 @@ class AsyncScheduler:
     With ``quorum == concurrency`` and homogeneous speed factors every merge
     is a full fresh cohort — history-identical to SyncScheduler, pinned by
     tests/test_async.py.
+
+    Fault tolerance (all off by default; defaults keep the legacy event
+    trajectory bit-identical):
+
+    * ``comm_factors`` — per-client communication-time multipliers: each
+      in-flight client's finish time adds ``client_comm_times * factor``
+      (compute heterogeneity alone, ``speed_factors``, misses slow links).
+    * ``timeout_s`` — a server-side wait budget per dispatched client; a
+      client that would arrive later (or whose upload the FaultPlan drops)
+      times out instead. Timed-out clients are re-dispatched with an
+      exponentially growing budget (``timeout_s * backoff**attempt``) up to
+      ``max_retries`` times, then abandoned and their slot backfilled with
+      a fresh client — bounded retry, no slot ever leaks.
+    * ``max_staleness`` — arrivals older than this many versions are
+      evicted unmerged (their slot backfills fresh).
+    * an engine ``FaultPlan`` — dropped uploads never arrive (without a
+      timeout the slot is lost and counted ``n_lost``), stragglers stretch
+      finish times by ``delay_factors``, corrupt uploads are poisoned at
+      dispatch and quarantined by the engine's merge guard.
+
+    Every event is counted in ``EngineState.fault_events``.
     """
 
     quorum: Optional[int] = None          # arrivals per merge; None -> concurrency
@@ -412,20 +449,35 @@ class AsyncScheduler:
     staleness_mode: str = "poly"
     staleness_a: float = 0.5
     speed_factors: Optional[Union[Sequence[float], np.ndarray]] = None
+    comm_factors: Optional[Union[Sequence[float], np.ndarray]] = None
+    timeout_s: Optional[float] = None     # per-client server wait budget
+    max_retries: int = 2                  # re-dispatches after a timeout
+    backoff: float = 2.0                  # timeout budget growth per retry
+    max_staleness: Optional[int] = None   # evict arrivals older than this
+
+    def _per_client(self, values, n_clients: int, name: str) -> np.ndarray:
+        if values is None:
+            return np.ones(n_clients, np.float64)
+        arr = np.asarray(values, np.float64)
+        if arr.shape != (n_clients,):
+            raise ValueError(
+                f"{name} must have shape ({n_clients},), got {arr.shape}")
+        return arr
 
     def run(self, engine, state):
         M = self.concurrency if self.concurrency is not None else engine.clients_per_round
         Q = self.quorum if self.quorum is not None else M
         if not 1 <= Q <= M:
             raise ValueError(f"quorum {Q} must be in [1, concurrency {M}]")
-        if self.speed_factors is None:
-            factors = np.ones(engine.fed.n_clients, np.float64)
-        else:
-            factors = np.asarray(self.speed_factors, np.float64)
-            if factors.shape != (engine.fed.n_clients,):
-                raise ValueError(
-                    f"speed_factors must have shape ({engine.fed.n_clients},), "
-                    f"got {factors.shape}")
+        if self.max_retries < 0 or self.backoff < 1.0:
+            raise ValueError("max_retries must be >= 0 and backoff >= 1")
+        factors = self._per_client(self.speed_factors, engine.fed.n_clients,
+                                   "speed_factors")
+        comm_f = (None if self.comm_factors is None else
+                  self._per_client(self.comm_factors, engine.fed.n_clients,
+                                   "comm_factors"))
+        plan = getattr(engine, "faults", None)
+        plan = plan if (plan is not None and not plan.empty) else None
         agg = engine.aggregator
         if isinstance(agg, StalenessWeightedAggregator):
             # same fail-fast contract as the engine's delay/cost_model knobs:
@@ -442,27 +494,65 @@ class AsyncScheduler:
                 base=agg, mode=self.staleness_mode, a=self.staleness_a)
 
         clock = VirtualClock()
-        heap: list = []          # (arrival_time, seq, entry) — seq: stable ties
+        heap: list = []          # (event_time, seq, entry) — seq: stable ties
         seq = 0
         version = 0              # server model version (merge count)
+        n_timeouts = 0
+        # circuit breaker: total dropout (every upload lost, every retry
+        # lost again) must degrade to a truncated run, never an infinite
+        # timeout -> retry -> timeout loop against the virtual clock
+        timeout_budget = engine.rounds * M * (self.max_retries + 2) * 8
 
-        def dispatch_cohort(m: int) -> None:
+        def dispatch_cohort(m: int, *, at: Optional[float] = None,
+                            attempt: int = 0, forced_sel=None) -> None:
             nonlocal seq
-            saved = engine.clients_per_round
-            engine.clients_per_round = m    # selectors size cohorts from this
-            try:
-                sel = np.asarray(engine.selector.select(engine, state))
-            finally:
-                engine.clients_per_round = saved
+            if forced_sel is not None:
+                sel = np.asarray(forced_sel)
+            else:
+                saved = engine.clients_per_round
+                engine.clients_per_round = m    # selectors size cohorts from this
+                try:
+                    sel = np.asarray(engine.selector.select(engine, state))
+                finally:
+                    engine.clients_per_round = saved
             out = engine.dispatch(state, sel, version)
+            if plan is not None:
+                cmask = plan.corruptions(version, sel)
+                if cmask.any():
+                    out = (corrupt_params_stack(out[0], cmask,
+                                                plan.corrupt_value()),
+                           ) + tuple(out[1:])
+                drops = plan.drops(version, sel)
+                dfact = plan.delay_factors(sel)
+            else:
+                drops = np.zeros(len(sel), bool)
+                dfact = np.ones(len(sel), np.float64)
             times = engine.cost_model.client_compute_times(engine, state, sel, out[-1])
+            ctimes = (None if comm_f is None else
+                      engine.cost_model.client_comm_times(engine, state, sel,
+                                                          out[-1]))
+            base = clock.now if at is None else at
             for pos, cli in enumerate(sel):
                 rel = float(times[pos]) * float(factors[cli])
+                if ctimes is not None:
+                    rel += float(ctimes[pos]) * float(comm_f[cli])
+                rel *= float(dfact[pos])
                 entry = dict(version=version, pos=pos, client=int(cli),
                              cohort=len(sel), out=out, rel_time=rel,
-                             dispatch_time=clock.now)
-                heapq.heappush(heap, (clock.now + rel, seq, entry))
-                seq += 1
+                             dispatch_time=base, attempt=attempt)
+                budget = (None if self.timeout_s is None
+                          else self.timeout_s * self.backoff ** attempt)
+                if drops[pos] and budget is None:
+                    # the upload is lost and the server waits forever for
+                    # it: without a timeout this in-flight slot leaks
+                    state.fault_events.n_lost += 1
+                elif budget is not None and (drops[pos] or rel > budget):
+                    entry["timed_out"] = True
+                    heapq.heappush(heap, (base + budget, seq, entry))
+                    seq += 1
+                else:
+                    heapq.heappush(heap, (base + rel, seq, entry))
+                    seq += 1
 
         if engine.rounds <= 0:
             return    # SyncScheduler is a no-op here too; don't burn a cohort
@@ -470,7 +560,25 @@ class AsyncScheduler:
         buffer: list = []
         t = 0
         while t < engine.rounds and heap:
-            _, _, entry = heapq.heappop(heap)
+            when, _, entry = heapq.heappop(heap)
+            if entry.get("timed_out"):
+                state.fault_events.n_timeouts += 1
+                n_timeouts += 1
+                if n_timeouts > timeout_budget:
+                    break           # graceful truncation, never a spin
+                if entry["attempt"] < self.max_retries:
+                    state.fault_events.n_retries += 1
+                    dispatch_cohort(1, at=when, attempt=entry["attempt"] + 1,
+                                    forced_sel=[entry["client"]])
+                else:
+                    state.fault_events.n_aborted += 1
+                    dispatch_cohort(1, at=when)     # backfill a fresh slot
+                continue
+            if (self.max_staleness is not None
+                    and version - entry["version"] > self.max_staleness):
+                state.fault_events.n_evicted += 1
+                dispatch_cohort(1, at=when)         # replace the stale slot
+                continue
             buffer.append(entry)
             if len(buffer) < Q:
                 continue

@@ -1,8 +1,10 @@
 from repro.checkpoint.ckpt import (
+    checkpoint_steps,
     latest_step,
     load_checkpoint,
     load_latest,
     save_checkpoint,
 )
 
-__all__ = ["save_checkpoint", "load_checkpoint", "load_latest", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "load_latest", "latest_step",
+           "checkpoint_steps"]

@@ -39,6 +39,11 @@ def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
     try:
         with open(tmp, "wb") as f:
             f.write(msgpack.packb(payload, use_bin_type=True))
+            # flush + fsync BEFORE the rename: os.replace is atomic in the
+            # namespace but not durable — without the fsync a crash can leave
+            # the final name pointing at torn (partially-persisted) bytes
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic
     finally:
         # a failed pack/write must not leave a stray .tmp behind (latest_step
@@ -69,21 +74,50 @@ def load_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def load_latest(directory: str, like: PyTree) -> tuple[int, PyTree]:
-    """Restore the newest ``step_*.msgpack`` in ``directory`` (auto-picked
-    via ``latest_step``). Returns ``(step, tree)``."""
-    step = latest_step(directory)
-    if step is None:
+# what a torn / corrupt checkpoint file surfaces as: truncated or unreadable
+# bytes (OSError, msgpack UnpackException incl. OutOfData/ExtraData), a
+# payload that isn't the expected map (TypeError, ValueError from frombuffer
+# or a shape mismatch), or one missing leaves (KeyError)
+_CORRUPT_ERRORS = (OSError, ValueError, KeyError, TypeError,
+                   msgpack.exceptions.UnpackException)
+
+
+def load_latest(directory: str, like: PyTree,
+                *, strict: bool = False) -> tuple[int, PyTree]:
+    """Restore the newest *loadable* ``step_*.msgpack`` in ``directory``.
+
+    A torn write (truncated file) or otherwise corrupt checkpoint is
+    skipped with a fallback to the next-newest step; ``strict=True``
+    restores the old fail-fast behavior (newest or nothing). Raises
+    ``FileNotFoundError`` when no checkpoints exist at all, ``ValueError``
+    (listing every per-step failure) when none of them load.
+    Returns ``(step, tree)``."""
+    steps = checkpoint_steps(directory)
+    if not steps:
         raise FileNotFoundError(f"no step_*.msgpack checkpoints in {directory!r}")
-    return step, load_checkpoint(directory, step, like)
+    failures = []
+    for step in reversed(steps):
+        try:
+            return step, load_checkpoint(directory, step, like)
+        except _CORRUPT_ERRORS as e:
+            if strict:
+                raise
+            failures.append(f"step {step}: {type(e).__name__}: {e}")
+    raise ValueError(f"no loadable checkpoint in {directory!r}; every "
+                     "candidate failed:\n  " + "\n  ".join(failures))
 
 
-def latest_step(directory: str) -> int | None:
+def checkpoint_steps(directory: str) -> list[int]:
+    """All checkpoint steps present in ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(m.group(1))
         for fname in os.listdir(directory)
         if (m := re.fullmatch(r"step_(\d+)\.msgpack", fname))
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory: str) -> int | None:
+    steps = checkpoint_steps(directory)
+    return steps[-1] if steps else None

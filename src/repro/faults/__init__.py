@@ -1,0 +1,24 @@
+"""repro.faults — deterministic fault injection + graceful degradation.
+
+``FaultPlan`` describes seeded faults (dropout / stragglers / corrupt
+uploads / torn checkpoint writes); ``UpdateGuard`` + ``guard_mask`` are
+the merge-side admission rule; ``FaultCounters`` is the per-run ledger on
+``EngineState.fault_events``; ``build_faulty_chunk`` is the fault-aware
+fused executor. See ``launch/fed_chaos.py`` for the end-to-end harness.
+"""
+from repro.faults.fused import build_faulty_chunk
+from repro.faults.plan import (
+    CORRUPT_MODES,
+    FaultCounters,
+    FaultPlan,
+    UpdateGuard,
+    corrupt_params_stack,
+    guard_mask,
+    tear_file,
+)
+
+__all__ = [
+    "FaultPlan", "FaultCounters", "UpdateGuard", "guard_mask",
+    "corrupt_params_stack", "tear_file", "build_faulty_chunk",
+    "CORRUPT_MODES",
+]

@@ -1,0 +1,242 @@
+"""Deterministic fault injection for the federated engine.
+
+A ``FaultPlan`` is a *seeded description* of everything that can go wrong
+in a deployment — clients dropping out mid-round, stragglers holding the
+cohort hostage, poisoned/overflowed update uploads, torn checkpoint
+writes — evaluated lazily per ``(kind, round, client)`` coordinate so
+every executor (stepwise, fused, client-sharded, pod-sharded, async)
+sees the *same* faults for the same plan, regardless of dispatch order
+or how many rounds a chunk scans. Decisions come from
+``np.random.default_rng((seed, kind, round, client))`` — a SeedSequence
+spawn, stable across processes and platforms — so a chaos run is exactly
+reproducible from its seed alone.
+
+The plan only *describes* faults. Enforcement lives in three places:
+
+* ``FedEngine`` (repro.api.engine) consumes ``drops`` / ``corruptions``
+  / ``delay_factors`` between its dispatch and merge halves, and its
+  merge path runs the ``UpdateGuard`` below so non-finite or
+  norm-exploded updates are quarantined (counted in
+  ``EngineState.fault_events``), never silently averaged in;
+* ``AsyncScheduler`` (repro.api.protocols) prices straggler delays into
+  the virtual clock and loses dropped uploads (timing out / retrying
+  them when configured);
+* ``checkpoint.ckpt`` / ``launch.fed_chaos`` use ``tear_file`` to
+  simulate torn writes.
+
+An empty plan (all rates zero) is inert by contract: every consumer
+gates its behavior change on the fault actually firing, so runs with
+``FaultPlan()`` — or no plan at all — stay bit-identical to the
+pre-fault code paths (pinned by tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import asdict, dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultPlan", "FaultCounters", "UpdateGuard", "guard_mask",
+           "corrupt_params_stack", "tear_file", "CORRUPT_MODES"]
+
+CORRUPT_MODES = ("nan", "inf", "scale")
+
+# Event-kind salts: each fault family draws from its own independent
+# stream, so e.g. raising `dropout` never reshuffles who gets corrupted.
+_DROP, _CORRUPT, _STRAGGLE, _TORN = 11, 13, 17, 19
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, rate-parameterized fault scenario (see module docstring).
+
+    dropout          P(a dispatched client's upload never reaches the
+                     server) per (round, client).
+    straggler_frac   fraction of the *client population* that is a
+                     permanent straggler (static per client, like
+                     AsyncScheduler.speed_factors).
+    straggler_mult   compute/comm time multiplier for stragglers.
+    corrupt          P(a client's uploaded params are corrupted) per
+                     (round, client).
+    corrupt_mode     "nan" | "inf" (non-finite poison; caught by the
+                     finite guard) | "scale" (finite blow-up by
+                     corrupt_scale; needs UpdateGuard.max_norm to catch).
+    torn_write       P(a checkpoint save is torn mid-write) per step.
+    """
+
+    seed: int = 0
+    dropout: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_mult: float = 4.0
+    corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    corrupt_scale: float = 1e6
+    torn_write: float = 0.0
+
+    def __post_init__(self):
+        for name in ("dropout", "straggler_frac", "corrupt", "torn_write"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultPlan.{name} must be in [0, 1], got {v}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r}; "
+                             f"known: {' | '.join(CORRUPT_MODES)}")
+        if self.straggler_mult < 1.0:
+            raise ValueError("straggler_mult must be >= 1 (a straggler is "
+                             f"slower, not faster), got {self.straggler_mult}")
+
+    @property
+    def empty(self) -> bool:
+        """True when the plan injects nothing (consumers treat it as None)."""
+        return not (self.dropout or self.straggler_frac
+                    or self.corrupt or self.torn_write)
+
+    # -- deterministic per-coordinate draws --------------------------------
+
+    def _fires(self, rate: float, *coords: int) -> bool:
+        return np.random.default_rng(
+            (self.seed,) + tuple(int(c) for c in coords)).random() < rate
+
+    def drops(self, t: int, sel: Sequence[int]) -> np.ndarray:
+        """Bool mask over the cohort: whose round-``t`` upload is lost."""
+        sel = np.asarray(sel)
+        if self.dropout <= 0.0:
+            return np.zeros(len(sel), bool)
+        return np.array([self._fires(self.dropout, _DROP, t, c) for c in sel])
+
+    def corruptions(self, t: int, sel: Sequence[int]) -> np.ndarray:
+        """Bool mask over the cohort: whose round-``t`` upload is corrupted."""
+        sel = np.asarray(sel)
+        if self.corrupt <= 0.0:
+            return np.zeros(len(sel), bool)
+        return np.array([self._fires(self.corrupt, _CORRUPT, t, c) for c in sel])
+
+    def corrupt_value(self) -> float:
+        """The per-element multiplier a corrupted upload is scaled by."""
+        return {"nan": float("nan"), "inf": float("inf"),
+                "scale": float(self.corrupt_scale)}[self.corrupt_mode]
+
+    def stragglers(self, clients: Sequence[int]) -> np.ndarray:
+        """Bool mask: which of ``clients`` are (static) stragglers."""
+        clients = np.asarray(clients)
+        if self.straggler_frac <= 0.0:
+            return np.zeros(len(clients), bool)
+        return np.array([self._fires(self.straggler_frac, _STRAGGLE, c)
+                         for c in clients])
+
+    def delay_factors(self, clients: Sequence[int]) -> np.ndarray:
+        """Per-client wall-time multipliers (straggler_mult or 1.0)."""
+        f = np.ones(len(np.asarray(clients)), np.float64)
+        f[self.stragglers(clients)] = self.straggler_mult
+        return f
+
+    def tears_write(self, step: int) -> bool:
+        """Does the checkpoint save at ``step`` tear mid-write?"""
+        return self.torn_write > 0.0 and self._fires(self.torn_write, _TORN, step)
+
+    def describe(self) -> str:
+        """Compact scenario slug for bench rows / logs."""
+        parts = []
+        if self.dropout:
+            parts.append(f"drop{self.dropout:g}")
+        if self.straggler_frac:
+            parts.append(f"strag{self.straggler_frac:g}x{self.straggler_mult:g}")
+        if self.corrupt:
+            parts.append(f"corrupt{self.corrupt:g}:{self.corrupt_mode}")
+        if self.torn_write:
+            parts.append(f"torn{self.torn_write:g}")
+        return "+".join(parts) or "none"
+
+    def snapshot(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class FaultCounters:
+    """What the engine/scheduler actually did about faults, accumulated on
+    ``EngineState.fault_events`` — the observable half of every injected
+    (or organic) fault, so chaos runs can assert nothing was silently
+    averaged in or silently lost."""
+
+    n_dropped: int = 0        # cohort uploads that never reached a merge
+    n_quarantined: int = 0    # non-finite / norm-exploded updates rejected
+    n_empty_merges: int = 0   # merges with no survivor (server no-op round)
+    n_timeouts: int = 0       # async waits that expired before arrival
+    n_retries: int = 0        # async re-dispatches after a timeout
+    n_aborted: int = 0        # async clients abandoned after max_retries
+    n_evicted: int = 0        # async updates evicted past max_staleness
+    n_lost: int = 0           # async slots lost with no timeout configured
+
+    def any(self) -> bool:
+        return any(v for v in vars(self).values())
+
+    def snapshot(self) -> dict:
+        return dict(vars(self))
+
+
+@dataclass(frozen=True)
+class UpdateGuard:
+    """Merge-side admission rule for client updates: every leaf must be
+    finite, and (when ``max_norm`` is set) the update's global L2 distance
+    from the current server params must not exceed it. The finite check
+    alone catches "nan"/"inf" corruption; "scale" corruption is finite and
+    needs the norm ceiling. A guard that admits everything changes nothing
+    — bit-parity with unguarded history is pinned by tests/test_faults.py."""
+
+    max_norm: Optional[float] = None
+
+
+@jax.jit
+def _guard_stats(stacked, ref):
+    """Per-client (all_finite, sum-of-squared-deltas-vs-ref) across leaves."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    refs = jax.tree_util.tree_leaves(ref)
+    m = leaves[0].shape[0]
+    ok = jnp.ones((m,), bool)
+    sumsq = jnp.zeros((m,), jnp.float32)
+    for x, r in zip(leaves, refs):
+        flat = x.reshape(m, -1)
+        ok &= jnp.all(jnp.isfinite(flat), axis=1)
+        d = flat - r.reshape(1, -1)
+        # non-finite deltas would poison sumsq; zero them (ok already False)
+        d = jnp.where(jnp.isfinite(d), d, 0.0)
+        sumsq += jnp.sum(d * d, axis=1)
+    return ok, sumsq
+
+
+def guard_mask(stacked, ref, max_norm: Optional[float]) -> np.ndarray:
+    """Host-side admission mask for a stacked (m, ...) update pytree:
+    True where the client's update passes the UpdateGuard."""
+    ok, sumsq = jax.device_get(_guard_stats(stacked, ref))
+    ok = np.array(ok, bool)        # copy: device_get views can be read-only
+    if max_norm is not None:
+        ok &= np.sqrt(np.asarray(sumsq, np.float64)) <= float(max_norm)
+    return ok
+
+
+def corrupt_params_stack(params_stack, mask: np.ndarray, value: float):
+    """Multiply the masked members' rows of a stacked (m, ...) params
+    pytree by ``value`` (NaN/inf poison or a finite blow-up) — the host
+    half of corruption injection, shared by the stepwise engine path and
+    the AsyncScheduler. Unmasked rows are multiplied by 1.0 (exact)."""
+    m = len(mask)
+    mult = np.ones(m, np.float32)
+    mult[np.asarray(mask, bool)] = value
+    mj = jnp.asarray(mult)
+    return jax.tree_util.tree_map(
+        lambda x: x * mj.reshape((m,) + (1,) * (x.ndim - 1)).astype(x.dtype),
+        params_stack)
+
+
+def tear_file(path: str, keep_frac: float = 0.5) -> int:
+    """Simulate a torn write: truncate ``path`` to ``keep_frac`` of its
+    bytes (at least 1 byte removed). Returns the new size."""
+    size = os.path.getsize(path)
+    keep = min(int(size * keep_frac), size - 1)
+    keep = max(keep, 0)
+    with open(path, "rb+") as f:
+        f.truncate(keep)
+    return keep

@@ -61,10 +61,15 @@ class DelayModel:
     bandwidth_bytes_per_s: float = 12.5e6  # 100 Mbit/s
     latency_s: float = 0.05
 
-    def compute_time(self, flops: float) -> float:
+    # Both delays accept a scalar OR a per-client np.ndarray and return the
+    # same shape — the cost model prices whole cohorts in one call, and the
+    # AsyncScheduler's per-client heterogeneity knobs (speed_factors for
+    # compute, comm_factors for links) multiply these baselines elementwise.
+
+    def compute_time(self, flops):
         return flops / self.client_flops_per_s
 
-    def comm_time(self, bytes_: float) -> float:
+    def comm_time(self, bytes_):
         return self.latency_s + bytes_ / self.bandwidth_bytes_per_s
 
 

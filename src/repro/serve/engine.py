@@ -19,6 +19,18 @@ inference time:
 * ``"fresh"`` — layer-1 is recomputed for the query's 1-hop neighborhood
   and scattered over the table (exactly ``gcn_batch_forward``'s fresh-rows
   semantics), giving exact logits at ~(max_deg+1)x the embed compute.
+
+Degraded modes (all off by default, counters on the engine):
+
+* ``fallback`` — when the fresh path raises or returns non-finite logits
+  (e.g. poisoned streaming features), the batch is re-served from the warm
+  historical cache instead of failing (``n_fallbacks``);
+* ``deadline_ms`` — a ``"fresh"`` batch whose queueing delay already
+  exceeds the deadline is downgraded to ``"historical"`` — cheaper and
+  still warm — rather than making the queue worse (``n_degraded``);
+* ``max_queue`` — :meth:`admit` rejects new requests outright once the
+  queue passes this occupancy, shedding load explicitly (``n_rejected``)
+  instead of letting latency grow without bound.
 """
 from __future__ import annotations
 
@@ -39,15 +51,29 @@ class QueryEngine:
 
     def __init__(self, model: ServedModel, *,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 cache_policy: str = "historical"):
+                 cache_policy: str = "historical",
+                 deadline_ms: float | None = None,
+                 max_queue: int | None = None,
+                 fallback: bool = True):
         if cache_policy not in CACHE_POLICIES:
             raise ValueError(f"unknown cache_policy {cache_policy!r}; "
                              f"known: {CACHE_POLICIES}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be positive, got {deadline_ms}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.model = model
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         if not self.buckets or self.buckets[0] < 1:
             raise ValueError(f"buckets must be positive ints, got {buckets!r}")
         self.cache_policy = cache_policy
+        # graceful-degradation knobs + their observable counters
+        self.deadline_ms = deadline_ms
+        self.max_queue = max_queue
+        self.fallback = bool(fallback)
+        self.n_rejected = 0      # requests shed at admission (queue full)
+        self.n_degraded = 0      # fresh batches downgraded past deadline_ms
+        self.n_fallbacks = 0     # fresh chunks re-served from the warm cache
         # incremented inside the traced bodies: bumps exactly when XLA
         # (re)compiles a serve shape — the no-recompile-after-warmup probe
         self.trace_count = 0
@@ -147,21 +173,33 @@ class QueryEngine:
         touched = np.unique(np.concatenate(
             [q[:n].astype(np.int64), b_idx[:n][b_mask[:n] > 0].astype(np.int64)]))
         hit_rate = float(model.valid[touched].mean()) if len(touched) else 1.0
-        if policy == "historical":
-            logits = self._fn_hist(model.params, model.h1, q, b_idx, b_mask,
-                                   seg_b)
-        else:
+        fell_back = False
+        if policy == "fresh":
             r = np.unique(np.concatenate(
                 [q.astype(np.int64), b_idx[b_mask > 0].astype(np.int64)]))
             r_cap = b * (store.max_deg + 1)
             rrows, rvalid = self._pad_rows(r, r_cap)
             r_idx, r_mask = store.neighbors(rrows)
             seg_r = self._seg_operands(r_idx, r_mask)
-            logits = self._fn_fresh(model.params, model.feat, model.h1, q,
-                                    b_idx, b_mask, seg_b, rrows, rvalid,
-                                    r_idx, r_mask, seg_r)
+            try:
+                logits = np.asarray(self._fn_fresh(
+                    model.params, model.feat, model.h1, q, b_idx, b_mask,
+                    seg_b, rrows, rvalid, r_idx, r_mask, seg_r))
+                if self.fallback and not np.isfinite(logits[:n]).all():
+                    raise ArithmeticError("non-finite fresh logits")
+            except Exception:
+                if not self.fallback:
+                    raise
+                # degrade, don't fail: the warm historical cache still has
+                # the last good embeddings for these rows
+                self.n_fallbacks += 1
+                fell_back = True
+                policy = "historical"
+        if policy == "historical":
+            logits = self._fn_hist(model.params, model.h1, q, b_idx, b_mask,
+                                   seg_b)
         info = {"bucket": b, "real": n, "touched": len(touched),
-                "hit_rate": hit_rate, "policy": policy}
+                "hit_rate": hit_rate, "policy": policy, "fell_back": fell_back}
         return np.asarray(logits)[:n], info
 
     # ------------------------------------------------------------------
@@ -192,15 +230,38 @@ class QueryEngine:
         [logits], _ = self.serve_batch([node_ids], policy=policy)
         return logits
 
-    def serve_batch(self, requests, policy: str | None = None):
+    def admit(self, queue_depth: int) -> bool:
+        """Admission control: False (and ``n_rejected`` bumps) when the
+        queue is already at ``max_queue`` — explicit load shedding beats
+        unbounded latency. Always True when ``max_queue`` is unset."""
+        if self.max_queue is not None and queue_depth >= self.max_queue:
+            self.n_rejected += 1
+            return False
+        return True
+
+    def degraded_snapshot(self) -> dict:
+        """The degradation counters, for ledgers / bench payloads."""
+        return {"n_rejected": self.n_rejected, "n_degraded": self.n_degraded,
+                "n_fallbacks": self.n_fallbacks}
+
+    def serve_batch(self, requests, policy: str | None = None,
+                    queue_ms: float | None = None):
         """Pack concurrent requests into padded micro-batches and serve them.
 
         Returns ``(per_request_logits, info)`` where info carries the bucket
         occupancy and cache hit-rate the latency ledger records.
+        ``queue_ms`` is the batch's queueing delay so far: a ``"fresh"``
+        batch already past ``deadline_ms`` is downgraded to the cheaper
+        ``"historical"`` policy (``info["policy"]`` reports what actually
+        ran).
         """
         policy = self.cache_policy if policy is None else policy
         if policy not in CACHE_POLICIES:
             raise ValueError(f"unknown cache_policy {policy!r}")
+        if (policy == "fresh" and self.deadline_ms is not None
+                and queue_ms is not None and queue_ms > self.deadline_ms):
+            policy = "historical"
+            self.n_degraded += 1
         lens = []
         parts = []
         for r in requests:
@@ -230,6 +291,7 @@ class QueryEngine:
             "hit_rate": sum(c["hit_rate"] * c["touched"] for c in chunks)
             / tot_touch,
             "policy": policy,
+            "fell_back": any(c["fell_back"] for c in chunks),
         }
         self.model.step += 1
         return per_request, info

@@ -135,9 +135,13 @@ class LatencyLedger:
     occupancies: list = field(default_factory=list)
     refresh_rows: int = 0
     horizon_s: float = 0.0
+    rejects: int = 0
 
     def record_query(self, **kw) -> None:
         self.queries.append(QueryRecord(**kw))
+
+    def record_reject(self) -> None:
+        self.rejects += 1
 
     def record_update(self, kind: str, n_invalidated: int, dt_s: float) -> None:
         self.updates.append({"kind": kind, "n_invalidated": n_invalidated,
@@ -150,7 +154,8 @@ class LatencyLedger:
         self.refresh_rows += n_rows
 
     def summary(self, *, backend: str, devices: int, quick: bool, mode: str,
-                policy_mix: dict, model_summary: dict | None = None) -> dict:
+                policy_mix: dict, model_summary: dict | None = None,
+                degraded: dict | None = None) -> dict:
         lat = [q.latency_ms for q in self.queries]
         by_bucket: dict[int, list] = {}
         by_policy: dict[str, list] = {}
@@ -191,6 +196,9 @@ class LatencyLedger:
         }
         if model_summary:
             payload["model"] = model_summary
+        if degraded is not None or self.rejects:
+            # engine degradation counters + the requests this ledger shed
+            payload["degraded"] = {"n_shed": self.rejects, **(degraded or {})}
         return payload
 
 
@@ -280,15 +288,20 @@ class LoadGenerator:
     def _serve(self, batch: list[dict], now: float,
                ledger: LatencyLedger) -> float:
         """Serve one packed micro-batch; returns the completion time."""
+        # queueing delay so far drives the engine's deadline downgrade
+        queue_ms = max(0.0, (now - min(q["t"] for q in batch)) * 1e3)
         t0 = time.perf_counter()
         _, info = self.engine.serve_batch([q["ids"] for q in batch],
-                                          policy=batch[0]["policy"])
+                                          policy=batch[0]["policy"],
+                                          queue_ms=queue_ms)
         dt = time.perf_counter() - t0
         done = now + dt
         ledger.record_batch(info["occupancy"])
         for q, chunk in zip(batch, _spread(info["chunks"], batch)):
+            # record the policy that actually ran (deadline downgrades and
+            # fresh-path fallbacks land in the "historical" bucket)
             ledger.record_query(arrival=q["t"], done=done, n_nodes=len(q["ids"]),
-                                bucket=chunk["bucket"], policy=q["policy"],
+                                bucket=chunk["bucket"], policy=chunk["policy"],
                                 hit_rate=info["hit_rate"])
         return done
 
@@ -310,7 +323,10 @@ class LoadGenerator:
                 t, kind = events[i]
                 i += 1
                 if kind == "q":
-                    pending.append(self._make_query(t))
+                    if self.engine.admit(len(pending)):
+                        pending.append(self._make_query(t))
+                    else:
+                        ledger.record_reject()
                 else:
                     now += self._apply_update(ledger)
             if not pending:

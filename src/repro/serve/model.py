@@ -250,6 +250,12 @@ class ServedModel:
     def invalid_rows(self) -> np.ndarray:
         return np.flatnonzero(~self.valid[: self.n_active])
 
+    def nonfinite_rows(self) -> np.ndarray:
+        """Active cache rows holding any non-finite embedding — the health
+        probe chaos runs watch to prove poisoned refreshes never land."""
+        h = np.asarray(self.h1[: self.n_active])
+        return np.flatnonzero(~np.isfinite(h).all(axis=1))
+
     def summary(self) -> dict:
         age = self.cache_age
         out = {
@@ -264,6 +270,8 @@ class ServedModel:
             "cache_age_max": int(age.max()) if len(age) else 0,
             "rows_invalidated": self.n_invalidated,
             "rows_refreshed": self.n_refreshed,
+            "h1_finite_frac": (1.0 - len(self.nonfinite_rows()) / self.n_active)
+            if self.n_active else 1.0,
         }
         if self.table_age is not None:
             out["table_age_mean"] = float(self.table_age.mean())

@@ -100,20 +100,29 @@ def weighted_merge(axes, w, reduce: str):
     """The sharded executors' aggregation rule: sum(w·x)/sum(w) across the
     mesh ``axes`` — a weighted psum all-reduce (``reduce="psum"``) or a
     deterministic fp32 binary tree over all-gathered per-device partial
-    sums (``reduce="pairwise"``). Returns the per-leaf mean function."""
+    sums (``reduce="pairwise"``). Returns the per-leaf merge function
+    ``wmean(x, old)``: when every weight is zero (a round where the whole
+    cohort dropped out under a FaultPlan — never a healthy run, where
+    padding always leaves real positive weights) the merge degrades to
+    the carried ``old`` leaf instead of dividing 0/0 into NaN params.
+    With any surviving weight the guard is exact: ``max(wsum, tiny)``
+    equals ``wsum`` and the ``where`` passes the quotient through
+    bit-unchanged."""
     if reduce == "psum":
         wsum = jax.lax.psum(w.sum(), axes)
 
-        def wmean(x):
+        def wmean(x, old):
             wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
-            return jax.lax.psum((x * wb).sum(axis=0), axes) / wsum
+            num = jax.lax.psum((x * wb).sum(axis=0), axes)
+            return jnp.where(wsum > 0.0, num / jnp.maximum(wsum, 1e-12), old)
     else:   # "pairwise": association fixed by device count, not by XLA
         wsum = pairwise_sum(jax.lax.all_gather(w.sum(), axes))
 
-        def wmean(x):
+        def wmean(x, old):
             wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
-            part = jax.lax.all_gather((x * wb).sum(axis=0), axes, axis=0)
-            return pairwise_sum(part) / wsum
+            num = pairwise_sum(
+                jax.lax.all_gather((x * wb).sum(axis=0), axes, axis=0))
+            return jnp.where(wsum > 0.0, num / jnp.maximum(wsum, 1e-12), old)
     return wmean
 
 
@@ -130,7 +139,7 @@ def _client_step(vm, mesh: Mesh, axis: str, reduce: str):
                  tau, fanouts, eoff, keys)
         new_params, new_hist1, new_age, new_ghost, stats = out
         wmean = weighted_merge(axis, w, reduce)
-        agg = jax.tree_util.tree_map(wmean, new_params)
+        agg = jax.tree_util.tree_map(wmean, new_params, params)
         return agg, new_hist1, new_age, new_ghost, stats
 
     c, r = P(axis), P()

@@ -220,7 +220,7 @@ def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
 
         # ---- aggregation: weighted all-reduce, or fp32 pairwise tree ----
         wmean = weighted_merge(axes, w, reduce)
-        agg = jax.tree_util.tree_map(wmean, new_params)
+        agg = jax.tree_util.tree_map(wmean, new_params, params)
 
         # ---- cohort-keyed bucket write-back ----
         # stage 1: gather the pod row's cohort slice (m/P rows) across the

@@ -301,6 +301,122 @@ def test_assert_k_flat_passes_on_scaled_ledgers():
     assert assert_k_flat(a, b) == []
 
 
+# ---------------------------------------------------------------------------
+# BENCH_faults.json schema guard (repro.launch.fed_chaos)
+# ---------------------------------------------------------------------------
+
+from repro.launch.fed_chaos import validate_bench_faults  # noqa: E402
+
+
+def good_faults_payload():
+    row = {
+        "scenario": "drop0.3", "scheduler": "sync_fused",
+        "executor": "fused_faulty", "dropout": 0.3, "straggler_frac": 0.0,
+        "corrupt": 0.0, "corrupt_mode": "nan", "baseline_acc": 0.8,
+        "final_acc": 0.75, "acc_delta": 0.05, "rounds_completed": 6,
+        "params_finite": True, "crashed": False,
+        "faults": {"n_dropped": 7, "n_quarantined": 0, "n_empty_merges": 0},
+    }
+    base = dict(row, scenario="none", dropout=0.0, final_acc=0.8,
+                acc_delta=0.0, faults={})
+    return {
+        "bench": "fault_tolerance", "devices": 8, "quick": True, "seed": 0,
+        "dataset": "pubmed", "scale": 32, "clients": 8, "rounds": 6,
+        "cohort": 4, "method": "fedais", "acc_bound": 0.3,
+        "max_acc_delta": 0.05, "crashes": 0, "all_finite": True,
+        "rows": [base, row],
+        "serve": {"n_fallbacks": 1, "n_degraded": 0, "n_rejected": 3,
+                  "n_shed": 3, "fresh_fell_back": True,
+                  "fallback_finite": True, "fallback_matches_warm": True,
+                  "h1_finite_frac": 1.0},
+        "ckpt": {"torn_step": 2, "recovered_step": 1, "recovered": True},
+    }
+
+
+def test_good_faults_payload_validates():
+    assert validate_bench_faults(good_faults_payload()) == []
+
+
+def test_checked_in_faults_bench_validates():
+    path = os.path.join(REPO_ROOT, "BENCH_faults.json")
+    if not os.path.exists(path):
+        import pytest
+        pytest.skip("no BENCH_faults.json checked in")
+    with open(path) as f:
+        assert validate_bench_faults(json.load(f)) == []
+
+
+def test_faults_missing_keys_and_types():
+    assert validate_bench_faults(None) != []
+    for key in ("bench", "devices", "crashes", "all_finite", "rows",
+                "serve", "ckpt", "max_acc_delta", "acc_bound"):
+        p = good_faults_payload()
+        del p[key]
+        assert any(key in e for e in validate_bench_faults(p)), key
+    p = good_faults_payload()
+    p["bench"] = "serve_latency"
+    assert any("bench" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["crashes"] = -1
+    assert any("crashes" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["rows"] = []
+    assert any("rows" in e for e in validate_bench_faults(p))
+
+
+def test_faults_row_errors():
+    p = good_faults_payload()
+    del p["rows"][1]["executor"]
+    assert any("rows[1]" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["rows"][1]["dropout"] = 1.5
+    assert any("dropout" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["rows"][1]["rounds_completed"] = -2
+    assert any("rounds_completed" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["rows"][1]["crashed"] = "no"
+    assert any("crashed" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["rows"][1]["faults"] = None
+    assert any("faults" in e for e in validate_bench_faults(p))
+
+
+def test_faults_aggregates_must_match_rows():
+    # a crashed row the top-level counter doesn't admit to
+    p = good_faults_payload()
+    p["rows"][1]["crashed"] = True
+    assert any("crashed" in e for e in validate_bench_faults(p))
+    p["crashes"] = 1
+    assert validate_bench_faults(p) == []
+    # a max_acc_delta that understates the worst row
+    p = good_faults_payload()
+    p["max_acc_delta"] = 0.0
+    assert any("max_acc_delta" in e for e in validate_bench_faults(p))
+
+
+def test_faults_serve_and_ckpt_sections():
+    p = good_faults_payload()
+    del p["serve"]["n_fallbacks"]
+    assert any("n_fallbacks" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["serve"]["h1_finite_frac"] = 1.5
+    assert any("h1_finite_frac" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    del p["ckpt"]["recovered_step"]
+    assert any("recovered_step" in e for e in validate_bench_faults(p))
+    p = good_faults_payload()
+    p["ckpt"]["recovered"] = 1
+    assert any("recovered" in e for e in validate_bench_faults(p))
+
+
+def test_faults_validator_is_pure():
+    p = good_faults_payload()
+    snapshot = copy.deepcopy(p)
+    validate_bench_faults(p)
+    assert p == snapshot
+
+
 def test_assert_k_flat_catches_k_scaling():
     a, b = dryrun_result(clients=16), dryrun_result(clients=64)
     b["pods"]["per_device_resident_bytes"]["replicated"]["params"] += 4

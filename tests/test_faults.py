@@ -1,0 +1,442 @@
+"""Deterministic fault injection + graceful degradation (repro.faults).
+
+The contracts this file pins:
+
+* **empty plans are inert** — ``faults=None``, ``FaultPlan()`` and
+  ``guard=False`` all produce bit-identical histories through the
+  stepwise AND fused executors (the no-fault paths did not move);
+* **executor parity under faults** — the fault-aware fused chunk agrees
+  with the stepwise path on every fault counter exactly and on the float
+  history to fp32 reassociation tolerance (dropped rows are summed as
+  interleaved zeros rather than compacted away, which reassociates the
+  merge reduction — see repro.faults.fused);
+* **nothing is silently averaged in** — non-finite (and, with a norm
+  ceiling, finite-but-exploded) updates are quarantined and counted, a
+  fully-dropped cohort is a server no-op round, and switching the guard
+  off demonstrably lets the poison through;
+* **async fault handling is bounded** — dropped uploads without a
+  timeout are counted lost; with a timeout they retry with exponential
+  backoff up to ``max_retries`` then abort + backfill; stale arrivals
+  evict; every run still terminates with finite params;
+* the checkpoint layer skips torn/corrupt files (newest valid wins).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import AsyncScheduler, FedEngine, SyncScheduler
+from repro.faults import (
+    CORRUPT_MODES,
+    FaultCounters,
+    FaultPlan,
+    UpdateGuard,
+    corrupt_params_stack,
+    guard_mask,
+    tear_file,
+)
+from repro.federated.partition import partition_graph
+from repro.graph.data import make_dataset
+
+N_DEV = len(jax.devices())
+needs_devices = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >=2 devices; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+ROUNDS, COHORT = 4, 2
+
+
+@pytest.fixture(scope="module")
+def small():
+    g = make_dataset("pubmed", scale=32, seed=0)
+    fed = partition_graph(g, 4, alpha=0.5, seed=0)
+    return g, fed
+
+
+def run(small, *, rounds=ROUNDS, m=COHORT, scheduler=None, **kw):
+    g, fed = small
+    engine = FedEngine(g, fed, "fedais", rounds=rounds, clients_per_round=m,
+                       seed=0, eval_every=2,
+                       scheduler=scheduler or SyncScheduler(fused=False), **kw)
+    state = engine.init_state()
+    result = engine.run(state)
+    return engine, state, result
+
+
+def assert_history_equal(a, b, keys=None):
+    keys = keys if keys is not None else set(a.history) | set(b.history)
+    for k in keys:
+        np.testing.assert_array_equal(
+            np.asarray(a.history[k]), np.asarray(b.history[k]), err_msg=k)
+
+
+def params_leaves(state):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(state.params)]
+
+
+def all_finite(state) -> bool:
+    return all(np.isfinite(x).all() for x in params_leaves(state))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: validation + deterministic draws
+# ---------------------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="dropout"):
+        FaultPlan(dropout=1.5)
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultPlan(corrupt_mode="martian")
+    with pytest.raises(ValueError, match="straggler_mult"):
+        FaultPlan(straggler_mult=0.5)
+    assert FaultPlan().empty
+    assert not FaultPlan(dropout=0.1).empty
+    assert FaultPlan().describe() == "none"
+    slug = FaultPlan(dropout=0.4, corrupt=0.2, corrupt_mode="inf").describe()
+    assert slug == "drop0.4+corrupt0.2:inf"
+    snap = FaultPlan(dropout=0.4).snapshot()
+    assert snap["dropout"] == 0.4 and snap["corrupt_mode"] in CORRUPT_MODES
+
+
+def test_plan_draws_are_deterministic_and_independent():
+    sel = np.arange(6)
+    a = FaultPlan(seed=3, dropout=0.4, corrupt=0.5)
+    b = FaultPlan(seed=3, dropout=0.4, corrupt=0.5)
+    np.testing.assert_array_equal(a.drops(2, sel), b.drops(2, sel))
+    np.testing.assert_array_equal(a.corruptions(2, sel), b.corruptions(2, sel))
+    # per-kind salts: changing the dropout rate must not reshuffle who is
+    # corrupted, and vice versa
+    c = FaultPlan(seed=3, dropout=0.9, corrupt=0.5)
+    np.testing.assert_array_equal(a.corruptions(2, sel), c.corruptions(2, sel))
+    # a different seed is a different scenario
+    d = FaultPlan(seed=4, dropout=0.4, corrupt=0.5)
+    assert not (np.array_equal(a.drops(0, sel), d.drops(0, sel))
+                and np.array_equal(a.drops(1, sel), d.drops(1, sel))
+                and np.array_equal(a.drops(2, sel), d.drops(2, sel)))
+    # rate-0 families never fire; rate-1 always fire
+    assert not FaultPlan(seed=3).drops(0, sel).any()
+    assert FaultPlan(seed=3, dropout=1.0).drops(0, sel).all()
+    # stragglers are static per client (round-independent)
+    s = FaultPlan(seed=3, straggler_frac=0.5)
+    np.testing.assert_array_equal(s.stragglers(sel), s.stragglers(sel))
+    f = s.delay_factors(sel)
+    assert set(np.unique(f)) <= {1.0, s.straggler_mult}
+
+
+def test_corrupt_value_modes():
+    assert np.isnan(FaultPlan(corrupt_mode="nan").corrupt_value())
+    assert np.isinf(FaultPlan(corrupt_mode="inf").corrupt_value())
+    assert FaultPlan(corrupt_mode="scale",
+                     corrupt_scale=42.0).corrupt_value() == 42.0
+
+
+def test_guard_mask_and_corrupt_stack():
+    stack = {"w": np.ones((4, 3), np.float32),
+             "b": np.zeros((4, 2), np.float32)}
+    ref = {"w": np.ones(3, np.float32), "b": np.zeros(2, np.float32)}
+    poisoned = corrupt_params_stack(stack, np.array([0, 1, 0, 0], bool),
+                                    float("nan"))
+    ok = guard_mask(poisoned, ref, None)
+    np.testing.assert_array_equal(ok, [True, False, True, True])
+    # mult-by-1.0 rows are bit-identical (corruption never perturbs the rest)
+    np.testing.assert_array_equal(np.asarray(poisoned["w"])[0], stack["w"][0])
+    # a finite blow-up passes the finite check but not the norm ceiling
+    blown = corrupt_params_stack(stack, np.array([0, 0, 1, 0], bool), 1e6)
+    assert guard_mask(blown, ref, None).all()
+    np.testing.assert_array_equal(guard_mask(blown, ref, 1e3),
+                                  [True, True, False, True])
+
+
+# ---------------------------------------------------------------------------
+# the inertness contract: empty plans change nothing, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [False, None], ids=["stepwise", "fused"])
+def test_empty_plan_bit_identical(small, fused):
+    _, _, r_none = run(small, scheduler=SyncScheduler(fused=fused))
+    _, _, r_empty = run(small, scheduler=SyncScheduler(fused=fused),
+                        faults=FaultPlan())
+    _, _, r_noguard = run(small, scheduler=SyncScheduler(fused=fused),
+                          guard=False)
+    assert_history_equal(r_none, r_empty)
+    assert_history_equal(r_none, r_noguard)
+
+
+def test_async_empty_plan_bit_identical(small):
+    # generous knobs that never fire + an empty plan keep the event
+    # trajectory identical (comm_factors stays None: setting it — even to
+    # 1.0 — adds communication pricing the legacy path never billed)
+    sched = AsyncScheduler(timeout_s=1e9, max_retries=3, max_staleness=100)
+    _, st, r_plain = run(small, scheduler=AsyncScheduler())
+    _, st2, r_knobs = run(small, scheduler=sched, faults=FaultPlan())
+    assert_history_equal(r_plain, r_knobs)
+    assert not st2.fault_events.any()
+
+
+# ---------------------------------------------------------------------------
+# dropout: zero-weight merges, no-op rounds, executor parity
+# ---------------------------------------------------------------------------
+
+def test_all_dropped_rounds_are_noops(small):
+    plan = FaultPlan(seed=1, dropout=1.0)
+    engine, state, _ = run(small, faults=plan)
+    _, fresh, _ = run(small, rounds=0)
+    for got, want in zip(params_leaves(state), params_leaves(fresh)):
+        np.testing.assert_array_equal(got, want)
+    ev = state.fault_events
+    assert ev.n_dropped == ROUNDS * COHORT
+    assert ev.n_empty_merges == ROUNDS
+    assert all_finite(state)
+
+
+def test_fused_matches_stepwise_under_faults(small):
+    plan = FaultPlan(seed=7, dropout=0.35, corrupt=0.3)
+    e1, s1, r1 = run(small, faults=plan, scheduler=SyncScheduler(fused=False))
+    e2, s2, r2 = run(small, faults=plan, scheduler=SyncScheduler())
+    assert e2.last_executor == "fused_faulty"
+    assert s1.fault_events.snapshot() == s2.fault_events.snapshot()
+    assert s1.fault_events.any()
+    # interleaved-zero summation reassociates the merge reduction: float
+    # history is allclose, everything discrete and cost-metered is exact
+    for k in r1.history:
+        a, b = np.asarray(r1.history[k]), np.asarray(r2.history[k])
+        if k in ("test_loss", "test_acc", "f1", "auc"):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6, err_msg=k)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=k)
+    assert all_finite(s1) and all_finite(s2)
+
+
+# ---------------------------------------------------------------------------
+# corruption: quarantine, the norm ceiling, and what "no guard" costs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["nan", "inf"])
+def test_nonfinite_corruption_quarantined(small, mode):
+    plan = FaultPlan(seed=2, corrupt=1.0, corrupt_mode=mode)
+    engine, state, _ = run(small, faults=plan)
+    _, fresh, _ = run(small, rounds=0)
+    # every update poisoned -> every merge empty -> params never moved
+    for got, want in zip(params_leaves(state), params_leaves(fresh)):
+        np.testing.assert_array_equal(got, want)
+    ev = state.fault_events
+    assert ev.n_quarantined == ROUNDS * COHORT
+    assert ev.n_empty_merges == ROUNDS
+    assert all_finite(state)
+
+
+def test_scale_corruption_needs_norm_ceiling(small):
+    plan = FaultPlan(seed=2, corrupt=1.0, corrupt_mode="scale",
+                     corrupt_scale=1e6)
+    # the default (finite-only) guard admits the blow-up: params explode
+    # (later rounds may overflow to non-finite updates the guard then
+    # quarantines organically, so only the magnitude is asserted)
+    _, loose, _ = run(small, faults=plan)
+    assert any(np.abs(x).max() > 1e3 for x in params_leaves(loose))
+    assert all_finite(loose)
+    # ...the norm ceiling quarantines it
+    _, tight, _ = run(small, faults=plan, guard=UpdateGuard(max_norm=1e3))
+    assert tight.fault_events.n_quarantined == ROUNDS * COHORT
+    _, fresh, _ = run(small, rounds=0)
+    for got, want in zip(params_leaves(tight), params_leaves(fresh)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_guard_off_lets_poison_through(small):
+    plan = FaultPlan(seed=2, corrupt=1.0, corrupt_mode="nan")
+    _, state, _ = run(small, faults=plan, guard=False)
+    assert state.fault_events.n_quarantined == 0
+    assert not all_finite(state)
+
+
+def test_counters_snapshot():
+    c = FaultCounters()
+    assert not c.any()
+    c.n_dropped = 3
+    assert c.any() and c.snapshot()["n_dropped"] == 3
+
+
+# ---------------------------------------------------------------------------
+# async: lost slots, bounded retry, staleness eviction, comm heterogeneity
+# ---------------------------------------------------------------------------
+
+def test_async_drop_without_timeout_loses_slots(small):
+    plan = FaultPlan(seed=5, dropout=0.5)
+    _, state, _ = run(small, faults=plan, scheduler=AsyncScheduler())
+    ev = state.fault_events
+    assert ev.n_lost > 0 and ev.n_timeouts == 0
+    assert all_finite(state)
+
+
+def test_async_timeout_retry_then_abort(small):
+    plan = FaultPlan(seed=5, dropout=0.5)
+    _, state, _ = run(
+        small, faults=plan,
+        scheduler=AsyncScheduler(timeout_s=5.0, max_retries=1, backoff=2.0))
+    ev = state.fault_events
+    assert ev.n_timeouts > 0 and ev.n_lost == 0
+    assert ev.n_retries > 0
+    # a client whose retries all drop is abandoned, never spun on
+    assert ev.n_aborted > 0
+    assert ev.n_timeouts == ev.n_retries + ev.n_aborted
+    assert state.round + 1 == ROUNDS      # the run still completed
+    assert all_finite(state)
+
+
+def test_async_total_dropout_truncates_gracefully(small):
+    plan = FaultPlan(seed=5, dropout=1.0)
+    _, state, _ = run(
+        small, faults=plan,
+        scheduler=AsyncScheduler(timeout_s=5.0, max_retries=2))
+    # every upload lost forever: the circuit breaker ends the run instead
+    # of spinning, and params never moved
+    _, fresh, _ = run(small, rounds=0)
+    for got, want in zip(params_leaves(state), params_leaves(fresh)):
+        np.testing.assert_array_equal(got, want)
+    assert state.fault_events.n_timeouts > 0
+
+
+def test_async_max_staleness_evicts(small):
+    # mild skew: slow v0 stragglers still pop inside the horizon, where a
+    # quorum-1 loop has already advanced the version past them
+    sched = AsyncScheduler(quorum=1, concurrency=4,
+                           speed_factors=[1.0, 2.0, 4.0, 8.0],
+                           max_staleness=0)
+    _, state, _ = run(small, rounds=8, scheduler=sched)
+    assert state.fault_events.n_evicted > 0
+    assert all_finite(state)
+
+
+def test_async_comm_factors(small):
+    _, _, r_base = run(small, scheduler=AsyncScheduler())
+    _, _, r_ones = run(small, scheduler=AsyncScheduler(comm_factors=np.ones(4)))
+    _, _, r_slow = run(small,
+                       scheduler=AsyncScheduler(comm_factors=np.full(4, 50.0)))
+    # setting comm_factors prices link time into every arrival (None bills
+    # none), and slower links bill strictly more virtual wall-clock
+    wall = lambda r: float(np.asarray(r.history["wall_clock"])[-1])  # noqa: E731
+    assert wall(r_ones) > wall(r_base)
+    assert wall(r_slow) > wall(r_ones)
+    # heterogeneous timing never changes how much work merges
+    np.testing.assert_array_equal(np.asarray(r_base.history["merged"]),
+                                  np.asarray(r_slow.history["merged"]))
+    with pytest.raises(ValueError, match="comm_factors"):
+        run(small, scheduler=AsyncScheduler(comm_factors=np.ones(3)))
+
+
+def test_async_knob_validation(small):
+    with pytest.raises(ValueError, match="max_retries"):
+        run(small, scheduler=AsyncScheduler(timeout_s=1.0, max_retries=-1))
+    with pytest.raises(ValueError, match="backoff"):
+        run(small, scheduler=AsyncScheduler(timeout_s=1.0, backoff=0.5))
+
+
+# ---------------------------------------------------------------------------
+# engine gating: what each executor supports under faults
+# ---------------------------------------------------------------------------
+
+def test_corrupt_plan_disables_sharded_executors(small):
+    g, fed = small
+    plan = FaultPlan(seed=1, corrupt=0.5)
+    engine = FedEngine(g, fed, "fedais", rounds=2, clients_per_round=2,
+                       seed=0, faults=plan)
+    why = engine._sharded_faults_unsafe_reason()
+    assert why and "corrupt" in why.lower()
+    ok, _ = engine.sharded_eligibility()
+    assert not ok
+    # dropout/straggler-only plans do not trip the fault gate
+    engine2 = FedEngine(g, fed, "fedais", rounds=2, clients_per_round=2,
+                        seed=0, faults=FaultPlan(seed=1, dropout=0.5))
+    assert not engine2._sharded_faults_unsafe_reason()
+
+
+def test_engine_guard_validation(small):
+    g, fed = small
+    with pytest.raises(ValueError, match="guard"):
+        FedEngine(g, fed, "fedais", rounds=1, guard="yes please")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: torn writes are skipped, newest valid wins
+# ---------------------------------------------------------------------------
+
+def test_torn_checkpoint_recovery(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint import (checkpoint_steps, latest_step, load_latest,
+                                  save_checkpoint)
+
+    like = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.zeros(2)}}
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.ones((3, 3)), "b": {"c": jnp.ones(2)}})
+    p2 = save_checkpoint(d, 2, {"a": 2 * jnp.ones((3, 3)),
+                                "b": {"c": 2 * jnp.ones(2)}})
+    assert tear_file(p2) < os.path.getsize(
+        os.path.join(d, "step_00000001.msgpack"))
+    step, tree = load_latest(d, like)
+    assert step == 1
+    assert float(np.asarray(tree["a"])[0, 0]) == 1.0
+    with pytest.raises(Exception):
+        load_latest(d, like, strict=True)
+    assert checkpoint_steps(d) == [1, 2] and latest_step(d) == 2
+    tear_file(os.path.join(d, "step_00000001.msgpack"))
+    with pytest.raises(ValueError, match="candidate"):
+        load_latest(d, like)
+
+
+def test_load_latest_missing_dir(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint import load_latest
+
+    with pytest.raises(FileNotFoundError):
+        load_latest(str(tmp_path / "nope"), {"a": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# sharded executors: dropout as zero-weight dead slots
+# ---------------------------------------------------------------------------
+
+@pytest.mark.sharded
+@needs_devices
+def test_sharded_dropout_matches_stepwise(small):
+    from repro.sharding.fed import make_client_mesh
+
+    g, fed = small
+    m = 4
+    n = max(d for d in range(1, N_DEV + 1) if m % d == 0)
+    plan = FaultPlan(seed=7, dropout=0.35, straggler_frac=0.25)
+    e1, s1, r1 = run(small, m=m, faults=plan,
+                     scheduler=SyncScheduler(fused=False))
+    e2, s2, r2 = run(small, m=m, faults=plan, scheduler=SyncScheduler(),
+                     mesh=make_client_mesh(n))
+    assert e2.last_executor == "sharded_fused"
+    assert s1.fault_events.snapshot() == s2.fault_events.snapshot()
+    for k in r1.history:
+        a, b = np.asarray(r1.history[k]), np.asarray(r2.history[k])
+        if k in ("test_loss", "test_acc", "f1", "auc"):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6, err_msg=k)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=k)
+
+
+@pytest.mark.sharded
+@needs_devices
+def test_sharded_all_dropped_is_safe(small):
+    from repro.sharding.fed import make_client_mesh
+
+    g, fed = small
+    m = 4
+    n = max(d for d in range(1, N_DEV + 1) if m % d == 0)
+    plan = FaultPlan(seed=1, dropout=1.0)
+    engine, state, _ = run(small, m=m, faults=plan,
+                           scheduler=SyncScheduler(),
+                           mesh=make_client_mesh(n))
+    assert engine.last_executor in ("sharded_fused", "pod_sharded")
+    # an all-zero weight vector must fall back to the old params, not 0/0
+    _, fresh, _ = run(small, rounds=0)
+    for got, want in zip(params_leaves(state), params_leaves(fresh)):
+        np.testing.assert_array_equal(got, want)
+    assert all_finite(state)

@@ -409,3 +409,141 @@ def test_loadgen_validations(trained):
         LoadGenerator(engine, mode="diagonal")
     with pytest.raises(ValueError, match="policy_mix"):
         LoadGenerator(engine, policy_mix={"psychic": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation (fault-tolerance layer)
+# ---------------------------------------------------------------------------
+
+def test_fresh_falls_back_to_warm_cache_on_poison(trained):
+    """Poisoned streaming features make the fresh path produce non-finite
+    logits; with ``fallback`` on, the chunk is re-served from the warm
+    historical cache — finite, bit-equal to a historical query — and the
+    degradation is observable (counter + per-chunk flags), never silent."""
+    import jax.numpy as jnp
+
+    model, engine = restore_engine(trained)
+    engine.warmup()
+    q = np.arange(12)
+    warm = engine.query(q, policy="historical")
+    clean = model.feat
+    model.feat = model.feat.at[:].set(jnp.nan)
+    try:
+        [got], info = engine.serve_batch([q], policy="fresh")
+        assert np.isfinite(got).all()
+        assert np.array_equal(got, warm)
+        assert info["fell_back"] and engine.n_fallbacks == 1
+        # the requested policy is reported at the top level; the chunks
+        # record what actually ran
+        assert info["policy"] == "fresh"
+        assert all(c["policy"] == "historical" for c in info["chunks"])
+
+        # fallback off: the legacy contract — raw (possibly non-finite)
+        # fresh logits come back untouched, nothing raises, no counters
+        _, strict_engine = restore_engine(trained, fallback=False)
+        strict_engine.warmup()
+        strict_engine.model.feat = strict_engine.model.feat.at[:].set(jnp.nan)
+        raw = strict_engine.query(q, policy="fresh")
+        assert not np.isfinite(raw).all()
+        assert strict_engine.n_fallbacks == 0
+    finally:
+        model.feat = clean
+    # recovered features serve fresh exactly again
+    assert np.isfinite(engine.query(q, policy="fresh")).all()
+
+
+def test_deadline_downgrades_fresh_to_historical(trained):
+    model, engine = restore_engine(trained, deadline_ms=5.0)
+    engine.warmup()
+    q = [np.arange(8)]
+    # under deadline (or unreported queueing): fresh runs as requested
+    _, info = engine.serve_batch(q, policy="fresh", queue_ms=1.0)
+    assert info["policy"] == "fresh" and engine.n_degraded == 0
+    _, info = engine.serve_batch(q, policy="fresh")
+    assert info["policy"] == "fresh" and engine.n_degraded == 0
+    # past deadline: the batch downgrades to the cheap warm-cache policy
+    [got], info = engine.serve_batch(q, policy="fresh", queue_ms=9.0)
+    assert info["policy"] == "historical" and engine.n_degraded == 1
+    assert np.array_equal(got, engine.query(q[0], policy="historical"))
+    # historical batches have nothing to downgrade
+    _, info = engine.serve_batch(q, policy="historical", queue_ms=9.0)
+    assert info["policy"] == "historical" and engine.n_degraded == 1
+
+
+def test_admission_control_sheds_past_max_queue(trained):
+    model, engine = restore_engine(trained, max_queue=2)
+    assert engine.admit(0) and engine.admit(1)
+    assert not engine.admit(2) and not engine.admit(5)
+    assert engine.n_rejected == 2
+    assert engine.degraded_snapshot() == {
+        "n_rejected": 2, "n_degraded": 0, "n_fallbacks": 0}
+    # unset: everything admits
+    _, open_engine = restore_engine(trained)
+    assert open_engine.admit(10 ** 6)
+    assert open_engine.n_rejected == 0
+    with pytest.raises(ValueError, match="deadline_ms"):
+        QueryEngine(model, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="max_queue"):
+        QueryEngine(model, max_queue=0)
+
+
+def test_nonfinite_rows_probe(trained):
+    model, engine = restore_engine(trained)
+    assert len(model.nonfinite_rows()) == 0
+    assert model.summary()["h1_finite_frac"] == 1.0
+    clean = model.h1
+    model.h1 = model.h1.at[3, 0].set(np.nan)
+    try:
+        assert list(model.nonfinite_rows()) == [3]
+        frac = model.summary()["h1_finite_frac"]
+        assert frac == 1.0 - 1.0 / model.n_active
+    finally:
+        model.h1 = clean
+
+
+def test_serve_keeps_answering_at_hard_cap(trained):
+    """Satellite: a store at its ``max_capacity`` ceiling refuses growth
+    with ``CapacityError`` but the engine keeps serving queries — ingestion
+    degrades, availability doesn't."""
+    model, engine = restore_engine(trained)
+    engine.warmup()
+    store = model.store
+    store.max_capacity = store.capacity          # operator memory budget hit
+    n0, cap0, grows0 = store.n_active, store.capacity, store.n_grows
+    headroom = cap0 - n0
+    feats = np.zeros((headroom + 1, store.n_features), np.float32)
+    with pytest.raises(CapacityError, match="hard cap"):
+        engine.add_nodes(feats)
+    # the failed insert left no partial state: no rows, no growth
+    assert store.n_active == n0 and store.capacity == cap0
+    assert store.n_grows == grows0
+    # and the engine still answers, recompile-free, with exact logits
+    before = engine.trace_count
+    got = engine.query(np.arange(16), policy="historical")
+    assert np.isfinite(got).all() and engine.trace_count == before
+    # inserts within the remaining headroom still land
+    if headroom:
+        ids, _ = engine.add_nodes(np.zeros((headroom, store.n_features),
+                                           np.float32))
+        assert store.n_active == cap0 and len(ids) == headroom
+
+
+def test_loadgen_shed_counters_ride_the_payload(trained):
+    """An open-loop burst against a tiny admission queue sheds load; the
+    ledger's summary reports the shed count + engine degradation counters
+    and still validates against the serve-bench schema."""
+    from repro.serve import LoadGenerator, validate_bench_serve
+
+    model, engine = restore_engine(trained, max_queue=1)
+    gen = LoadGenerator(engine, seed=0, n_queries=24, n_updates=0,
+                        mode="open", rate=200_000.0)
+    ledger = gen.run()
+    assert ledger.rejects > 0 and engine.n_rejected == ledger.rejects
+    payload = ledger.summary(backend=model.backend, devices=1, quick=True,
+                             mode="open", policy_mix=gen.policy_mix,
+                             degraded=engine.degraded_snapshot())
+    assert validate_bench_serve(payload) == []
+    assert payload["degraded"]["n_shed"] == ledger.rejects
+    assert payload["degraded"]["n_rejected"] == engine.n_rejected
+    # served + shed accounts for every generated query
+    assert sum(b["n"] for b in payload["buckets"]) + ledger.rejects == 24
