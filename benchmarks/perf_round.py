@@ -17,6 +17,11 @@ collective overhead may not win at quick shapes; the column tracks it).
 ``--sharded-only`` measures just that and merges it into the existing
 BENCH_round.json without touching the gated single-device rows — so a
 forced-multi-device rerun never overwrites the gate's own trajectory.
+``--quant-ablation`` trains the same configuration at every embedding-wire
+dtype (repro.federated.quant: fp32/bf16/int8) x tau grid point and merges
+accuracy-vs-bytes rows under the same discipline: plain and sharded-only
+runs carry the ablation rows forward, ablation runs never touch the gated
+rows or the sharded column.
 
     PYTHONPATH=src python -m benchmarks.perf_round --quick
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -32,16 +37,21 @@ import time
 import jax
 
 from benchmarks.common import emit_csv, fed_setup, save_rows
+from repro.federated.quant import SYNC_DTYPES, wire_bytes
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # BENCH_round.json schema: the perf-smoke gate and the forward-merge logic
-# (plain runs carry the sharded column, sharded-only runs keep the gated
-# rows) both rewrite the file, so malformed payloads would otherwise
-# propagate silently until a CI failure nobody can diagnose.
+# (plain runs carry the sharded column + quant rows, sharded-only and
+# quant-ablation runs keep the gated rows) all rewrite the file, so
+# malformed payloads would otherwise propagate silently until a CI failure
+# nobody can diagnose.
 _TOP_KEYS = ("bench", "backend", "devices", "quick", "fused_speedup",
              "sharded_rounds_per_s", "sharded_devices", "rows")
 _GATED_VARIANTS = ("stepwise", "fused")
+# tau grid for the accuracy-vs-bytes ablation: a tight schedule that syncs
+# often (the quantized wire works hardest) and the paper-default loose one
+_QUANT_TAUS = (2, 8)
 
 
 def validate_bench_round(payload, *, require_gated: bool = True) -> list[str]:
@@ -100,7 +110,141 @@ def validate_bench_round(payload, *, require_gated: bool = True) -> list[str]:
                     f"nulled together (got {srps!r} / {sdev!r})")
     if sdev is not None and (not isinstance(sdev, int) or sdev < 1):
         errs.append(f"sharded_devices must be None or a positive int, got {sdev!r}")
+    # quant_ablation rows (accuracy vs wire bytes per sync dtype x tau):
+    # each must carry a valid dtype/tau, an accuracy in [0, 1], and wire
+    # bytes that never exceed the fp32 nominal (equal at fp32) — and every
+    # tau that appears must include its fp32 baseline, or the reduction
+    # column has nothing to be relative to
+    q_taus: set = set()
+    fp32_taus: set = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or row.get("variant") != "quant_ablation":
+            continue
+        d, tau = row.get("sync_dtype"), row.get("tau")
+        if d not in SYNC_DTYPES:
+            errs.append(f"rows[{i}]: quant_ablation sync_dtype must be one "
+                        f"of {SYNC_DTYPES}, got {d!r}")
+        if not isinstance(tau, int) or tau < 1:
+            errs.append(f"rows[{i}]: quant_ablation tau must be a positive "
+                        f"int, got {tau!r}")
+        else:
+            q_taus.add(tau)
+            if d == "fp32":
+                fp32_taus.add(tau)
+        acc = row.get("test_acc")
+        if not isinstance(acc, (int, float)) or not 0.0 <= acc <= 1.0:
+            errs.append(f"rows[{i}]: quant_ablation test_acc must be in "
+                        f"[0, 1], got {acc!r}")
+        wb, fb = row.get("embed_wire_bytes"), row.get("embed_fp32_bytes")
+        if not isinstance(wb, (int, float)) or not isinstance(fb, (int, float)) \
+                or wb < 0 or fb < 0 or wb > fb:
+            errs.append(f"rows[{i}]: quant_ablation needs "
+                        f"0 <= embed_wire_bytes <= embed_fp32_bytes, got "
+                        f"{wb!r} / {fb!r}")
+        elif d == "fp32" and wb != fb:
+            errs.append(f"rows[{i}]: fp32 quant_ablation wire bytes must "
+                        f"equal the nominal ({wb!r} != {fb!r})")
+    for tau in sorted(q_taus - fp32_taus):
+        errs.append(f"quant_ablation rows at tau={tau} lack the fp32 "
+                    "baseline row")
     return errs
+
+
+def _load_prev(bench_path: str):
+    try:
+        with open(bench_path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _write_payload(bench_path: str, payload: dict, prev) -> None:
+    """Validate-then-write BENCH_round.json; gated rows are demanded
+    whenever this payload or the previous one carried them (a merge must
+    never drop them)."""
+    prev_gated = prev is not None and any(
+        isinstance(r, dict) and r.get("variant") in _GATED_VARIANTS
+        for r in prev.get("rows", []))
+    has_gated = any(isinstance(r, dict) and r.get("variant") in _GATED_VARIANTS
+                    for r in payload.get("rows", []))
+    problems = validate_bench_round(payload,
+                                    require_gated=has_gated or prev_gated)
+    if problems:
+        raise ValueError(
+            "refusing to write a malformed BENCH_round.json:\n  "
+            + "\n  ".join(problems))
+    with open(bench_path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def run_quant_ablation(quick: bool = True) -> list[dict]:
+    """The accuracy-vs-bytes ablation: train the same FedAIS configuration
+    at every wire dtype x tau grid point and record the final accuracy next
+    to the embedding-sync bytes the codec actually moves (per pulled ghost:
+    one (F,) feature row + one (H1,) hist1 row, each with its own int8
+    scale — ``repro.federated.quant.wire_bytes``). Rows merge into
+    BENCH_round.json without touching the gated single-device rows or the
+    carried sharded column (the ``--sharded-only`` discipline)."""
+    from repro.api import FedEngine, method_config
+    from repro.models.gcn import HIDDEN
+
+    ds = "pubmed"
+    scale = 16 if quick else 8
+    n_clients = 256
+    m = 4 if quick else 8
+    rounds = 20 if quick else 40
+    g, fed = fed_setup(ds, scale, n_clients, "0.5")
+    F, H1 = g.n_features, HIDDEN[0]
+    nominal_row = (F + H1) * 4          # client_embed_bytes' fp32 pricing
+    rows = []
+    for tau in _QUANT_TAUS:
+        for d in SYNC_DTYPES:
+            res = FedEngine(g, fed, method_config("fedais", tau0=tau),
+                            rounds=rounds, clients_per_round=m, seed=0,
+                            eval_every=rounds, sync_dtype=d).run()
+            embed_fp32 = float(res.history["comm_embed"][-1])
+            wire_row = wire_bytes((1, F), d) + wire_bytes((1, H1), d)
+            wire = embed_fp32 / nominal_row * wire_row
+            row = {
+                "variant": "quant_ablation",
+                "sync_dtype": d,
+                "tau": tau,
+                "rounds": rounds,
+                "clients": n_clients,
+                "cohort": m,
+                "test_acc": float(res.history["test_acc"][-1]),
+                "embed_fp32_bytes": embed_fp32,
+                "embed_wire_bytes": wire,
+                "wire_reduction": round(nominal_row / wire_row, 2),
+            }
+            rows.append(row)
+            print(f"# quant_ablation tau={tau} {d}: "
+                  f"acc={row['test_acc']:.4f} "
+                  f"wire={wire:,.0f}B ({row['wire_reduction']}x)")
+
+    bench_path = os.path.join(REPO_ROOT, "BENCH_round.json")
+    prev = _load_prev(bench_path)
+    if prev is not None:
+        # keep the gated stepwise/fused rows, the eval rows, and the
+        # sharded column untouched; replace only the ablation rows
+        payload = dict(prev)
+        payload["rows"] = [r for r in prev.get("rows", [])
+                           if not (isinstance(r, dict)
+                                   and r.get("variant") == "quant_ablation")]
+        payload["rows"] += rows
+    else:
+        payload = {
+            "bench": "round_throughput",
+            "backend": jax.default_backend(),
+            "devices": jax.device_count(),
+            "quick": quick,
+            "fused_speedup": None,
+            "sharded_rounds_per_s": None,
+            "sharded_devices": None,
+            "rows": rows,
+        }
+    _write_payload(bench_path, payload, prev)
+    return rows
 
 
 def _time_run(make_engine, repeats: int = 3) -> float:
@@ -220,12 +364,7 @@ def run(quick: bool = True, sharded: bool = False,
 
     bench_path = os.path.join(REPO_ROOT, "BENCH_round.json")
     sharded_devices = jax.device_count() if sharded_rps is not None else None
-    prev = None
-    try:
-        with open(bench_path) as f:
-            prev = json.load(f)
-    except (OSError, ValueError):
-        pass
+    prev = _load_prev(bench_path)
     if sharded_rps is None and prev is not None:
         # a non-sharded run must not erase the recorded sharded column —
         # carry the previous measurement forward (scalar, device count, AND
@@ -235,9 +374,15 @@ def run(quick: bool = True, sharded: bool = False,
         sharded_devices = prev.get("sharded_devices")
         rows += [r for r in prev.get("rows", [])
                  if isinstance(r, dict) and r.get("variant") == "sharded_fused"]
+    if not sharded_only and prev is not None:
+        # likewise the quant_ablation rows: the gate and sharded reruns
+        # never measure them, so they travel forward untouched
+        rows += [r for r in prev.get("rows", [])
+                 if isinstance(r, dict) and r.get("variant") == "quant_ablation"]
     if sharded_only and prev is not None:
         # merge: update only the sharded column + row, keep the gated
-        # single-device payload (fused_speedup, stepwise/fused/eval rows)
+        # single-device payload (fused_speedup, stepwise/fused/eval/quant
+        # rows)
         payload = dict(prev,
                        sharded_rounds_per_s=sharded_rps,
                        sharded_devices=sharded_devices)
@@ -255,20 +400,7 @@ def run(quick: bool = True, sharded: bool = False,
             "sharded_devices": sharded_devices,
             "rows": rows,
         }
-    # gated rows are demanded whenever this run produced them (any plain
-    # run) or the previous payload carried them (a merge must not drop
-    # them) — but not for sharded-only runs stacked on a gate-less file
-    prev_gated = prev is not None and any(
-        isinstance(r, dict) and r.get("variant") in _GATED_VARIANTS
-        for r in prev.get("rows", []))
-    problems = validate_bench_round(
-        payload, require_gated=not sharded_only or prev_gated)
-    if problems:
-        raise ValueError(
-            "refusing to write a malformed BENCH_round.json:\n  "
-            + "\n  ".join(problems))
-    with open(bench_path, "w") as f:
-        json.dump(payload, f, indent=1)
+    _write_payload(bench_path, payload, prev)
     return rows
 
 
@@ -288,7 +420,17 @@ def main() -> int:
                     help="record only, never fail on fused < stepwise (for "
                          "runs in environments the gate was not calibrated "
                          "for, e.g. forced multi-device CPU)")
+    ap.add_argument("--quant-ablation", action="store_true",
+                    help="run ONLY the accuracy-vs-bytes wire-format "
+                         "ablation (sync dtype x tau) and merge its rows "
+                         "into BENCH_round.json, leaving the gated rows and "
+                         "the sharded column untouched")
     args = ap.parse_args()
+    if args.quant_ablation:
+        rows = run_quant_ablation(quick=args.quick)
+        emit_csv("perf_round_quant", rows)
+        save_rows("perf_round_quant", rows)
+        return 0
     rows = run(quick=args.quick, sharded=args.sharded,
                sharded_only=args.sharded_only)
     emit_csv("perf_round", rows)

@@ -105,6 +105,7 @@ from repro.federated.partition import (
     ghost_exchange_buckets,
     writeback_routing,
 )
+from repro.federated.quant import check_sync_dtype, quant_roundtrip
 from repro.federated.server import build_eval_graph, evaluate_global
 from repro.graph.data import GraphData
 from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_init, gcn_param_count
@@ -228,6 +229,7 @@ class FedEngine:
         client_sharding: str = "auto",
         table_sharding: str = "auto",
         merge_reduce: str = "psum",
+        sync_dtype: str = "fp32",
         faults: Optional[FaultPlan] = None,
         guard: Union[UpdateGuard, bool, None] = True,
     ):
@@ -289,6 +291,10 @@ class FedEngine:
                 f"unknown merge_reduce {merge_reduce!r}; known: psum "
                 "(weighted all-reduce) | pairwise (fp32 fixed-tree over "
                 "gathered partials)")
+        # wire format of every historical-embedding exchange (ghost pull,
+        # write-back, pod collectives) — repro.federated.quant. "fp32" is
+        # bit-inert; bf16/int8 quantize the wire, accumulators stay fp32.
+        self.sync_dtype = check_sync_dtype(sync_dtype)
         self.mesh = mesh
         self.client_sharding = client_sharding
         self.table_sharding = table_sharding
@@ -343,7 +349,8 @@ class FedEngine:
         # jits it standalone, the fused path traces it inside the scanned
         # round_step, the sharded path shard_maps it (same computation, one
         # compilation each)
-        self._vm_raw = make_vmapped_update(self.mcfg, fed.n_max, fed.g_max, self.H1)
+        self._vm_raw = make_vmapped_update(self.mcfg, fed.n_max, fed.g_max,
+                                           self.H1, sync_dtype=self.sync_dtype)
         self._vm = jax.jit(self._vm_raw)
         self._fused_chunk = None            # built lazily by run_fused
         self._sharded_chunk = None          # built lazily when mesh is set
@@ -471,6 +478,13 @@ class FedEngine:
                 loss_all = stats["loss_all"][w]
             else:
                 loss_all = stats["loss_all"]
+            if self.sync_dtype != "fp32":
+                # the write-back is a wire: float rows round-trip through
+                # the codec (age stays int32/exact) on every executor
+                new_hist1 = quant_roundtrip(new_hist1, self.sync_dtype)
+                new_ghost_feat = quant_roundtrip(new_ghost_feat,
+                                                 self.sync_dtype)
+                loss_all = quant_roundtrip(loss_all, self.sync_dtype)
             state.hist = state.hist._replace(
                 hist1=state.hist.hist1.at[sel_j].set(new_hist1),
                 age=state.hist.age.at[sel_j].set(new_age),
@@ -689,6 +703,7 @@ class FedEngine:
         """One jitted chunk: scan the traced round_step over S rounds with
         the big mutable buffers donated (updated in place, never copied)."""
         vm, agg, sizes = self._vm_raw, self.aggregator, self._sizes_f32
+        sync_dtype = self.sync_dtype
 
         def chunk(params, hist1, age, ghost_feat, prev_loss, key,
                   arrays, sel_stack, fan_stack, eoffs, tau):
@@ -705,10 +720,16 @@ class FedEngine:
                          tau, fanouts, eoff, keys)
                 new_params, new_hist1, new_age, new_ghost_feat, stats = out
                 params = agg.aggregate(new_params, sizes[sel])
+                loss_wb = stats["loss_all"]
+                if sync_dtype != "fp32":
+                    new_hist1 = quant_roundtrip(new_hist1, sync_dtype)
+                    new_ghost_feat = quant_roundtrip(new_ghost_feat,
+                                                     sync_dtype)
+                    loss_wb = quant_roundtrip(loss_wb, sync_dtype)
                 hist1 = hist1.at[sel].set(new_hist1)
                 age = age.at[sel].set(new_age)
                 ghost_feat = ghost_feat.at[sel].set(new_ghost_feat)
-                prev_loss = prev_loss.at[sel].set(stats["loss_all"])
+                prev_loss = prev_loss.at[sel].set(loss_wb)
                 light = {k: stats[k] for k in _LIGHT_STATS}
                 return (params, hist1, age, ghost_feat, prev_loss, key), light
 
@@ -734,7 +755,7 @@ class FedEngine:
         if self._sharded_chunk is None or self._sharded_chunk_m != m:
             self._sharded_chunk = build_sharded_chunk(
                 self._vm_raw, mesh, axis, m, _LIGHT_STATS,
-                reduce=self.merge_reduce)
+                reduce=self.merge_reduce, sync_dtype=self.sync_dtype)
             self._sharded_chunk_m = m
         pad = cohort_padding(m, mesh.shape[axis])
         sel_stack = np.stack(sels).astype(np.int32)
@@ -782,7 +803,8 @@ class FedEngine:
                 {k: jnp.asarray(getattr(self.fed, k))
                  for k in POD_ARRAY_KEYS}, n_pods)
             gsrc = jnp.asarray(
-                exchange_ghost_features(buckets, self.fed.features))
+                exchange_ghost_features(buckets, self.fed.features,
+                                        dtype=self.sync_dtype))
             self._pod_static = shard_tables_to_mesh((statics, gsrc),
                                                     self.mesh)
         return self._pod_static
@@ -809,10 +831,11 @@ class FedEngine:
         if self._pod_chunk is None or self._pod_chunk_m != m:
             vm = make_vmapped_update(self.mcfg, self.fed.n_max,
                                      self.fed.g_max, self.H1,
-                                     ghost_source="prefetched")
+                                     ghost_source="prefetched",
+                                     sync_dtype=self.sync_dtype)
             self._pod_chunk = build_pod_sharded_chunk(
                 vm, mesh, m, buckets, _LIGHT_STATS,
-                reduce=self.merge_reduce)
+                reduce=self.merge_reduce, sync_dtype=self.sync_dtype)
             self._pod_chunk_m = m
         pad = cohort_padding(m, n_dev)
         sel_stack = np.stack(sels).astype(np.int32)
@@ -873,7 +896,8 @@ class FedEngine:
                 self._vm_raw, _LIGHT_STATS,
                 uses_weights=getattr(self.aggregator, "uses_weights", False),
                 finite_guard=g is not None,
-                max_norm=None if g is None else g.max_norm)
+                max_norm=None if g is None else g.max_norm,
+                sync_dtype=self.sync_dtype)
         sel_stack = np.stack(sels).astype(np.int32)
         w_stack = self._cohort_weights(sel_stack)
         w_stack[drop_stack] = 0.0

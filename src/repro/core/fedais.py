@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.historical import pull_ghosts, pull_ghosts_prefetched, push_embeddings
+from repro.federated.quant import check_sync_dtype, quant_roundtrip
 from repro.core.importance import (
     importance_probs,
     loss_delta_scores,
@@ -67,7 +68,8 @@ VMAP_IN_AXES_PREFETCHED = (None, 0, 0, 0, 0, 0, 0, 0, None, 0, None, 0)
 
 
 def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
-                        *, ghost_source: str = "tables"):
+                        *, ghost_source: str = "tables",
+                        sync_dtype: str = "fp32"):
     """The cohort-stacked LocalUpdate every executor vmaps over the selected
     clients — shared by the engine's stepwise/fused paths and the sharded
     round_step (repro.sharding.fed), so all of them run one computation.
@@ -75,12 +77,14 @@ def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
     ``make_local_update``)."""
     axes = VMAP_IN_AXES if ghost_source == "tables" else VMAP_IN_AXES_PREFETCHED
     return jax.vmap(make_local_update(mcfg, n_max, g_max, h1_dim,
-                                      ghost_source=ghost_source),
+                                      ghost_source=ghost_source,
+                                      sync_dtype=sync_dtype),
                     in_axes=axes)
 
 
 def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
-                      *, ghost_source: str = "tables"):
+                      *, ghost_source: str = "tables",
+                      sync_dtype: str = "fp32"):
     """Build the jit-able LocalUpdate for one client (Algorithm 1 lines 10-19).
 
     ``ghost_source`` picks where the tau-gated embedding sync reads from:
@@ -93,10 +97,19 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
       table-sharded executor before the cohort step. Same values (both are
       round-start snapshots), so the two modes are computationally
       identical per client.
+
+    ``sync_dtype`` selects the ghost-pull wire format (repro.federated.
+    quant): in ``"tables"`` mode the pulled feature/h1 rows are
+    round-tripped through the codec here — the semantic anchor every
+    single-host executor shares. In ``"prefetched"`` mode the rows arrive
+    already wire-quantized (the pod executor encodes the physical
+    all-to-all and the partition-time feature exchange), so this function
+    applies no second round-trip. ``"fp32"`` adds zero trace ops.
     """
     if ghost_source not in ("tables", "prefetched"):
         raise ValueError(f"unknown ghost_source {ghost_source!r}; "
                          "known: tables | prefetched")
+    check_sync_dtype(sync_dtype)
     bsz = batch_size_for(mcfg, n_max)
 
     def local_update(
@@ -189,6 +202,9 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
                 else:
                     gf, gh = pull_ghosts_prefetched(feats_all, hist1_all,
                                                     client["ghost_mask"])
+                if sync_dtype != "fp32" and ghost_source == "tables":
+                    gf = quant_roundtrip(gf, sync_dtype)
+                    gh = quant_roundtrip(gh, sync_dtype)
                 new_ghost_feat = jnp.where(need[:, None] > 0, gf, ghost_feat)
                 new_hist = hist1.at[n_max:].set(
                     jnp.where(need[:, None] > 0, gh, hist1[n_max:]))

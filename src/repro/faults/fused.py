@@ -30,12 +30,15 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.federated.quant import check_sync_dtype, quant_roundtrip
+
 __all__ = ["build_faulty_chunk"]
 
 
 def build_faulty_chunk(vm, light_stats: Sequence[str], *,
                        uses_weights: bool, finite_guard: bool = True,
-                       max_norm: Optional[float] = None):
+                       max_norm: Optional[float] = None,
+                       sync_dtype: str = "fp32"):
     """Build the jitted fault-aware fused chunk.
 
     ``uses_weights`` selects the merge rule to reproduce exactly:
@@ -43,7 +46,10 @@ def build_faulty_chunk(vm, light_stats: Sequence[str], *,
     divide when False. ``finite_guard=False`` disables the in-trace
     guard (matching an engine constructed with ``guard=None``, where
     non-finite updates poison the merge — by explicit user choice).
+    ``sync_dtype`` round-trips the written-back float rows through the
+    repro.federated.quant codec, matching the other executors' wire.
     """
+    check_sync_dtype(sync_dtype)
     light_stats = tuple(light_stats)
 
     def chunk(params, hist1, age, ghost_feat, prev_loss, key, arrays,
@@ -114,10 +120,16 @@ def build_faulty_chunk(vm, light_stats: Sequence[str], *,
             # non-survivors lose their write-back too: out-of-range row K
             # makes the scatter drop (same trick as sharded dummy padding)
             wb = jnp.where(alive, sel, K)
-            hist1 = hist1.at[wb].set(new_hist1)
+            loss_wb = stats["loss_all"]
+            new_hist1_wb, new_ghost_feat_wb = new_hist1, new_ghost_feat
+            if sync_dtype != "fp32":
+                new_hist1_wb = quant_roundtrip(new_hist1, sync_dtype)
+                new_ghost_feat_wb = quant_roundtrip(new_ghost_feat, sync_dtype)
+                loss_wb = quant_roundtrip(loss_wb, sync_dtype)
+            hist1 = hist1.at[wb].set(new_hist1_wb)
             age = age.at[wb].set(new_age)
-            ghost_feat = ghost_feat.at[wb].set(new_ghost_feat)
-            prev_loss = prev_loss.at[wb].set(stats["loss_all"])
+            ghost_feat = ghost_feat.at[wb].set(new_ghost_feat_wb)
+            prev_loss = prev_loss.at[wb].set(loss_wb)
 
             light = {k: stats[k] for k in light_stats}
             light["n_quarantined"] = n_quar

@@ -166,7 +166,8 @@ def simulate_ghost_exchange(buckets: GhostBuckets,
 
 
 def exchange_ghost_features(buckets: GhostBuckets,
-                            features: np.ndarray) -> np.ndarray:
+                            features: np.ndarray, *,
+                            dtype: str = "fp32") -> np.ndarray:
     """Bucketed owner exchange of the layer-0 ghost features (host, once per
     partition): the same send/recv routing as the hist1 all-to-all applied
     to the static (K, n_max, F) feature shards, so each pod fills its
@@ -175,8 +176,20 @@ def exchange_ghost_features(buckets: GhostBuckets,
     row [k, s] is ``features[ghost_owner[k, s], ghost_row[k, s]]`` for every
     real ghost slot and 0 elsewhere (exactly the gf half of
     ``core.historical.pull_ghosts``). Ghost sources are always owner OWN
-    rows (< n_max), so the hist-table routing indexes features directly."""
-    return simulate_ghost_exchange(buckets, features).astype(np.float32)
+    rows (< n_max), so the hist-table routing indexes features directly.
+
+    ``dtype`` quantizes the exchanged rows through the repro.federated.quant
+    codec (this exchange IS the wire for ghost features in the pod-sharded
+    executor). The round-trip runs through the same jax codec the in-trace
+    ghost pull uses, so the prefetched rows match the ``"tables"``-mode
+    pull's decode bit-for-bit (per-row codec commutes with the row gather).
+    """
+    out = simulate_ghost_exchange(buckets, features).astype(np.float32)
+    if dtype != "fp32":
+        from repro.federated.quant import quant_roundtrip
+        import jax.numpy as jnp
+        out = np.asarray(quant_roundtrip(jnp.asarray(out), dtype))
+    return out
 
 
 @dataclass

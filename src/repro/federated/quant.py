@@ -1,0 +1,109 @@
+"""Quantized wire format for historical-embedding exchanges.
+
+Every float payload the federation moves — the ghost hist1 all-to-all,
+the prebuilt ghost-source feature exchange, the cohort-keyed write-back
+bucket exchange, and the serving ``h1`` cache — can ride one of three
+wire dtypes:
+
+* ``"fp32"`` — bit-inert passthrough. ``encode``/``decode`` return their
+  input unchanged at the Python level (no trace ops), so an engine built
+  with ``sync_dtype="fp32"`` lowers to the byte-identical jaxpr it did
+  before this module existed.
+* ``"bf16"`` — truncate to bfloat16 on the wire, widen back to fp32 at
+  the receiver. 2x byte cut, ~3 decimal digits of mantissa.
+* ``"int8"`` — per-row symmetric quantization over the LAST axis:
+  ``scale = amax / 127`` per row, codes rounded half-to-even and clipped
+  to [-127, 127], decoded as ``code * scale``. ~4x byte cut on wide rows
+  (one fp32 scale rides per row). All-zero rows produce scale 0 and
+  decode to exact zeros, so 0/1 mask multiplies commute with the codec.
+
+Merge accumulators stay fp32 everywhere: quantization happens on table
+rows at the exchange boundary, never inside the parameter all-reduce.
+
+The int8 round-trip is idempotent in its codes: re-encoding a decoded
+row reproduces the same int8 codes exactly (the max-magnitude element
+decodes to ``127 * scale``, whose re-derived scale differs from the
+original by at most 1 ulp — far below the 0.5 rounding threshold on
+integer codes). Executors that round-trip at the semantic site and
+additionally quantize a physical collective therefore agree to ~1 ulp.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SYNC_DTYPES",
+    "check_sync_dtype",
+    "decode",
+    "encode",
+    "quant_roundtrip",
+    "wire_bytes",
+]
+
+SYNC_DTYPES = ("fp32", "bf16", "int8")
+
+# bytes per element on the wire (int8 additionally pays 4 B/row of scale)
+_ELEM_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def check_sync_dtype(dtype):
+    """Validate a wire dtype string (returns it for chaining)."""
+    if dtype not in SYNC_DTYPES:
+        raise ValueError(
+            f"sync dtype must be one of {SYNC_DTYPES}, got {dtype!r}")
+    return dtype
+
+
+def encode(x, dtype):
+    """Encode fp32 ``x`` for the wire -> ``(payload, scale_or_None)``.
+
+    ``scale`` is a fp32 array of shape ``x.shape[:-1] + (1,)`` for int8
+    and ``None`` otherwise. For fp32 this is the identity (no trace ops).
+    """
+    check_sync_dtype(dtype)
+    if dtype == "fp32":
+        return x, None
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16), None
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = (amax / 127.0).astype(jnp.float32)
+    safe = jnp.where(scale > 0, scale, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(x / safe), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def decode(payload, scale, dtype):
+    """Widen a wire payload back to fp32 (identity for fp32)."""
+    check_sync_dtype(dtype)
+    if dtype == "fp32":
+        return payload
+    if dtype == "bf16":
+        return payload.astype(jnp.float32)
+    return payload.astype(jnp.float32) * scale
+
+
+def quant_roundtrip(x, dtype):
+    """``decode(encode(x))`` — the value the receiver sees.
+
+    fp32 returns ``x`` itself (same object, zero trace ops), which is
+    what makes ``sync_dtype="fp32"`` bit-inert through jit.
+    """
+    if dtype == "fp32":
+        return x
+    payload, scale = encode(x, dtype)
+    return decode(payload, scale, dtype)
+
+
+def wire_bytes(shape, dtype):
+    """Bytes a fp32 array of ``shape`` occupies on the wire at ``dtype``.
+
+    int8 charges one fp32 scale per row (last axis = row).
+    """
+    check_sync_dtype(dtype)
+    n = int(np.prod(shape)) if len(shape) else 1
+    total = n * _ELEM_BYTES[dtype]
+    if dtype == "int8":
+        rows = n // int(shape[-1]) if len(shape) and shape[-1] else 0
+        total += rows * 4
+    return int(total)

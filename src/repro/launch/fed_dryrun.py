@@ -34,6 +34,17 @@ smoke proof that nothing scales with K):
         --force-devices 8 --pods 8 --clients 100000 --assert-k-flat 10000 \\
         --cohort 64 --n-max 64 --g-max 8 --features 32
 
+``--sync-dtype {fp32,bf16,int8}`` lowers the chunk with the quantized
+embedding wire (repro.federated.quant) and prices the ghost all-to-all +
+write-back exchanges at that dtype in the ledger's ``quant`` section;
+``--assert-quant-bytes`` lowers fp32 AND int8 at fixed K and fails unless
+int8 at least halves those wires (analytic ledger and measured HLO) while
+every per-device resident stays byte-identical:
+
+    PYTHONPATH=src python -m repro.launch.fed_dryrun --mesh host \\
+        --force-devices 8 --pods 8 --clients 1024 --assert-quant-bytes \\
+        --cohort 64 --n-max 64 --g-max 8 --features 32
+
 Run as a script this forces fake XLA host devices (512 by default, so
 both pod chip counts fit on CPU); importing the module never touches
 ``XLA_FLAGS`` — pass ``--force-devices N`` (0 disables) or use
@@ -51,6 +62,7 @@ from repro.api.engine import _LIGHT_STATS
 from repro.api.registry import method_config
 from repro.core.fedais import make_vmapped_update
 from repro.federated.partition import ghost_exchange_buckets
+from repro.federated.quant import SYNC_DTYPES, wire_bytes
 from repro.launch.mesh import production_chip_count
 from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_param_count
 from repro.sharding.fed import (
@@ -108,7 +120,7 @@ def pod_placement_ledger(buckets, *, n_pods: int, cohort_pad: int,
                          wb_cap: int, n_max: int, g_max: int, n_feat: int,
                          n_classes: int, tau: int, local_epochs: int,
                          max_deg: int = DRYRUN_MAX_DEG,
-                         rounds: int = 1) -> dict:
+                         rounds: int = 1, sync_dtype: str = "fp32") -> dict:
     """The analytic placement ledger for the pod-sharded chunk: every
     per-device resident array and per-round collective payload, in bytes,
     grouped by what it scales with. ``k_sharded`` rows are exactly
@@ -116,7 +128,14 @@ def pod_placement_ledger(buckets, *, n_pods: int, cohort_pad: int,
     entries never mention K; ``sync_gated`` entries only move bytes on
     rounds where the tau schedule syncs (``sync_round_gates``), so their
     effective per-round cost is the nominal payload times the schedule's
-    sync fraction — and exactly 0 on non-sync rounds."""
+    sync fraction — and exactly 0 on non-sync rounds.
+
+    The ``quant`` section prices the three embedding wires the codec
+    actually quantizes (``repro.federated.quant``) at ``sync_dtype``: the
+    ghost hist1 all-to-all and both write-back stages, where the float
+    tables ride as payload+scale and the int32 ``age`` rows stay 4-byte.
+    Every other ledger entry is dtype-independent — residents and the
+    owner-keyed cohort fetch stay fp32 regardless of the wire format."""
     H1 = HIDDEN[0]
     n_tot = n_max + g_max
     P, B = n_pods, buckets.bucket_size
@@ -152,6 +171,23 @@ def pod_placement_ledger(buckets, *, n_pods: int, cohort_pad: int,
     frac = float(sync_round_gates(eoffs, tau, local_epochs).mean())
     a2a = P * B * H1 * 4
     gfetch = m * g_max * (H1 + n_feat) * 4
+
+    # the quantized embedding wires: the ghost all-to-all moves the (P, B,
+    # H1) hist1 buffer as codec payload (+ per-row scales at int8); the
+    # write-back stages route the three float tables as payload+scale while
+    # the int32 age rows always stay 4 bytes per element
+    def quant_row(d):
+        return (wire_bytes((n_tot, H1), d) + n_tot * 4
+                + wire_bytes((g_max, n_feat), d) + wire_bytes((n_max,), d))
+
+    def quant_wires(d):
+        return {
+            "ghost_all_to_all": wire_bytes((P, B, H1), d),
+            "wb_stage1_all_gather": (m // P) * quant_row(d),
+            "wb_stage2_all_to_all": P * wb_cap * quant_row(d),
+        }
+
+    wire, fp32w = quant_wires(sync_dtype), quant_wires("fp32")
     return {
         "schema_version": 2,
         "n_pods": P,
@@ -186,14 +222,26 @@ def pod_placement_ledger(buckets, *, n_pods: int, cohort_pad: int,
             "ghost_fetch_effective_bytes": int(round(gfetch * frac)),
             "non_sync_round_ghost_bytes": 0,
         },
+        "quant": {
+            "sync_dtype": sync_dtype,
+            "wire_collective_bytes": wire,
+            "fp32_collective_bytes": fp32w,
+            "reduction": {k: round(fp32w[k] / wire[k], 2) for k in wire},
+        },
     }
 
 
 _POD_LEDGER_KEYS = ("schema_version", "n_pods", "table_shard_rows_per_pod",
                     "ghost_cut_entries", "bucket_size", "wb_cap",
                     "per_device_resident_bytes",
-                    "per_round_collective_bytes", "sync",
+                    "per_round_collective_bytes", "sync", "quant",
                     "all_to_all_bytes", "all_gather_bytes")
+# the fp32 column of the quant section must restate these nominal entries
+_QUANT_NOMINAL = {"ghost_all_to_all": ("sync_gated", "ghost_all_to_all"),
+                  "wb_stage1_all_gather": ("cohort_scaled",
+                                           "wb_stage1_all_gather"),
+                  "wb_stage2_all_to_all": ("cohort_scaled",
+                                           "wb_stage2_all_to_all")}
 _TOP_KEYS = ("status", "arch", "mesh", "chips", "clients", "cohort",
              "collectives", "roofline")
 
@@ -202,8 +250,10 @@ def validate_fed_dryrun(result: dict) -> list[str]:
     """Schema-check a fed_dryrun result row before it is written (the
     ``validate_bench_round`` pattern). Returns a list of problems (empty =
     valid): required keys present and typed, every ledger class a dict of
-    non-negative ints, the sync fraction in [0, 1], and the non-sync-round
-    ghost bytes pinned to 0 (the gated-exchange contract)."""
+    non-negative ints, the sync fraction in [0, 1], the non-sync-round
+    ghost bytes pinned to 0 (the gated-exchange contract), and the quant
+    section's fp32 column restating the nominal collective entries (with
+    the wire column never exceeding it, and equal to it at fp32)."""
     errs: list[str] = []
     if not isinstance(result, dict):
         return [f"result is {type(result).__name__}, expected dict"]
@@ -247,6 +297,29 @@ def validate_fed_dryrun(result: dict) -> list[str]:
     if not isinstance(a2a, int) or a2a != int(round(nominal * frac)):
         errs.append("pods.sync.ghost_all_to_all_effective_bytes must equal "
                     "ghost_all_to_all x sync_fraction")
+    quant = pods["quant"]
+    dtype = quant.get("sync_dtype")
+    if dtype not in SYNC_DTYPES:
+        errs.append(f"pods.quant.sync_dtype must be one of {SYNC_DTYPES}, "
+                    f"got {dtype!r}")
+    wire = quant.get("wire_collective_bytes", {})
+    fp32w = quant.get("fp32_collective_bytes", {})
+    for name, (cls, nom_key) in _QUANT_NOMINAL.items():
+        w, f = wire.get(name), fp32w.get(name)
+        if not isinstance(w, int) or w <= 0:
+            errs.append(f"pods.quant.wire_collective_bytes.{name} must be a "
+                        f"positive int, got {w!r}")
+            continue
+        nom = pods["per_round_collective_bytes"][cls].get(nom_key)
+        if f != nom:
+            errs.append(f"pods.quant.fp32_collective_bytes.{name} must "
+                        f"restate {cls}.{nom_key} ({nom}), got {f!r}")
+        if w > f:
+            errs.append(f"pods.quant.wire_collective_bytes.{name} ({w}) "
+                        f"exceeds its fp32 nominal ({f})")
+        if dtype == "fp32" and w != f:
+            errs.append(f"pods.quant.{name}: fp32 wire must be bit-inert "
+                        f"({w} != {f})")
     return errs
 
 
@@ -289,6 +362,35 @@ def assert_k_flat(res_a: dict, res_b: dict) -> list[str]:
     return errs
 
 
+def assert_quant_bytes(res_fp32: dict, res_int8: dict) -> list[str]:
+    """The quantized-wire contract between two dry-runs that differ ONLY
+    in ``--sync-dtype`` (fp32 vs int8): every quantized embedding wire —
+    the ghost all-to-all and both write-back stages — must cost at most
+    half its fp32 bytes (analytically, per the ledger's quant section, AND
+    as measured off the lowered HLO's all-to-all / all-gather totals),
+    while the per-device resident ledger stays byte-identical (tables are
+    stored fp32; only the wire narrows). Returns violations (empty =
+    int8 halves the embedding sync)."""
+    errs: list[str] = []
+    pa, pb = res_fp32["pods"], res_int8["pods"]
+    qa = pa["quant"]["wire_collective_bytes"]
+    qb = pb["quant"]["wire_collective_bytes"]
+    for name in sorted(qa):
+        if qb[name] * 2 > qa[name]:
+            errs.append(f"quant.{name}: int8 wire {qb[name]}B is not <= "
+                        f"half of fp32 {qa[name]}B")
+    for kind in ("all-to-all", "all-gather"):
+        ba = res_fp32["collectives"].get(kind, 0)
+        bb = res_int8["collectives"].get(kind, 0)
+        if bb * 2 > ba:
+            errs.append(f"HLO {kind}: int8 lowers to {bb}B, not <= half of "
+                        f"fp32's {ba}B — the wire is not quantized")
+    if pa["per_device_resident_bytes"] != pb["per_device_resident_bytes"]:
+        errs.append("per_device_resident_bytes differ between fp32 and int8 "
+                    "— residents must stay fp32 regardless of wire dtype")
+    return errs
+
+
 def dryrun_mesh(mesh_name: str, args) -> dict:
     """Lower one sharded round chunk on ``mesh_name``'s chip count and
     report collectives + roofline. With ``--pods P`` the mesh is the 2-D
@@ -304,6 +406,7 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
     mcfg = method_config("fedais", local_epochs=4, batch_cap=args.n_max)
     buckets = None
     pad = cohort_padding(m, chips)
+    sync_dtype = getattr(args, "sync_dtype", "fp32")
     if pods:
         if chips % pods:
             raise ValueError(f"{chips} chips do not split into {pods} pods")
@@ -311,8 +414,10 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
         buckets = synthetic_ghost_buckets(K, args.n_max, args.g_max, pods,
                                           fill=args.ghost_fill)
         vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0],
-                                 ghost_source="prefetched")
-        chunk = build_pod_sharded_chunk(vm, mesh, m, buckets, _LIGHT_STATS)
+                                 ghost_source="prefetched",
+                                 sync_dtype=sync_dtype)
+        chunk = build_pod_sharded_chunk(vm, mesh, m, buckets, _LIGHT_STATS,
+                                        sync_dtype=sync_dtype)
         sargs = abstract_pod_chunk_args(
             mesh, buckets, n_clients=K, cohort=m + pad, n_max=args.n_max,
             g_max=args.g_max, n_feat=args.features, n_classes=args.classes,
@@ -320,9 +425,11 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
     else:
         mesh = make_client_mesh(chips)
         axis = client_axis_of(mesh)
-        vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0])
+        vm = make_vmapped_update(mcfg, args.n_max, args.g_max, HIDDEN[0],
+                                 sync_dtype=sync_dtype)
         chunk = build_sharded_chunk(vm, mesh, axis, m_real=m,
-                                    light_stats=_LIGHT_STATS)
+                                    light_stats=_LIGHT_STATS,
+                                    sync_dtype=sync_dtype)
         sargs = abstract_chunk_args(
             mesh, n_clients=K, cohort=m + pad, n_max=args.n_max,
             g_max=args.g_max, n_feat=args.features, n_classes=args.classes)
@@ -349,7 +456,7 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
     result = {
         "status": "ok", "arch": "fedgcn-graphsage", "shape": f"K{K}",
         "mesh": mesh_name, "chips": chips, "clients": K, "cohort": m,
-        "cohort_pad": pad,
+        "cohort_pad": pad, "sync_dtype": sync_dtype,
         "gcn_params": n_params,
         "compile_s": round(time.time() - t0, 1),
         "collectives": {k: int(v) for k, v in coll.bytes_by_kind.items()},
@@ -366,7 +473,7 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
             buckets, n_pods=pods, cohort_pad=m + pad, wb_cap=wb_cap,
             n_max=args.n_max, g_max=args.g_max, n_feat=args.features,
             n_classes=args.classes, tau=args.tau,
-            local_epochs=mcfg.local_epochs)
+            local_epochs=mcfg.local_epochs, sync_dtype=sync_dtype)
         ledger["all_to_all_bytes"] = int(
             coll.bytes_by_kind.get("all-to-all", 0))
         ledger["all_gather_bytes"] = int(
@@ -384,6 +491,13 @@ def dryrun_mesh(mesh_name: str, args) -> dict:
               f"ghost a2a {p['sync']['ghost_all_to_all_effective_bytes']:,}B "
               f"effective at sync fraction {p['sync']['sync_fraction']:.2f} "
               f"(0B on non-sync rounds)")
+        q = p["quant"]
+        if q["sync_dtype"] != "fp32":
+            cuts = ", ".join(
+                f"{name} {q['wire_collective_bytes'][name]:,}B "
+                f"({q['reduction'][name]}x)"
+                for name in sorted(q["wire_collective_bytes"]))
+            print(f"    [{mesh_name}] {q['sync_dtype']} wire: {cuts}")
     return result
 
 
@@ -415,6 +529,16 @@ def main(argv=None):
                          "clients and fail unless every replicated resident "
                          "and cohort-scaled collective is byte-identical "
                          "(the CI proof that nothing scales with K)")
+    ap.add_argument("--sync-dtype", default="fp32", choices=list(SYNC_DTYPES),
+                    help="wire format for the embedding sync (repro."
+                         "federated.quant): ghost all-to-all + write-back "
+                         "exchange payloads; fp32 is bit-inert")
+    ap.add_argument("--assert-quant-bytes", action="store_true",
+                    help="with --pods: lower the chunk at fp32 AND int8 and "
+                         "fail unless int8 at least halves the ghost "
+                         "all-to-all + write-back bytes (ledger and lowered "
+                         "HLO) with per-device residents byte-identical "
+                         "(the CI proof the codec narrows only the wire)")
     ap.add_argument("--n-max", type=int, default=512)
     ap.add_argument("--g-max", type=int, default=256)
     ap.add_argument("--features", type=int, default=128)
@@ -433,6 +557,8 @@ def main(argv=None):
 
     if args.assert_k_flat and not (args.pods and args.clients):
         ap.error("--assert-k-flat needs --pods and an explicit --clients")
+    if args.assert_quant_bytes and not args.pods:
+        ap.error("--assert-quant-bytes needs --pods")
 
     meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
     rc = 0
@@ -472,6 +598,35 @@ def main(argv=None):
                   f"cohort-scaled collectives, and lowered all-gather/"
                   f"all-reduce bytes identical at K={args.clients} and "
                   f"K={args.assert_k_flat}; k_sharded exactly linear in K/P")
+        if args.assert_quant_bytes:
+            variants = {args.sync_dtype: result}
+            try:
+                for d in ("fp32", "int8"):
+                    if d not in variants:
+                        args_d = argparse.Namespace(**{**vars(args),
+                                                       "sync_dtype": d})
+                        variants[d] = dryrun_mesh(mesh_name, args_d)
+            except Exception as e:
+                print(f"[{mesh_name}] ERROR lowering quant variant: "
+                      f"{type(e).__name__}: {e}")
+                rc = 1
+                continue
+            violations = assert_quant_bytes(variants["fp32"],
+                                            variants["int8"])
+            if violations:
+                print(f"[{mesh_name}] QUANT-BYTES CONTRACT VIOLATED "
+                      f"(fp32 vs int8):")
+                for v in violations:
+                    print(f"    - {v}")
+                rc = 1
+                continue
+            c32, c8 = (variants[d]["collectives"] for d in ("fp32", "int8"))
+            print(f"    [{mesh_name}] quant-bytes: int8 cuts the lowered "
+                  f"all-to-all {c32.get('all-to-all', 0):,}B -> "
+                  f"{c8.get('all-to-all', 0):,}B and all-gather "
+                  f"{c32.get('all-gather', 0):,}B -> "
+                  f"{c8.get('all-gather', 0):,}B (>= 2x each); per-device "
+                  f"residents byte-identical")
         if args.out:
             os.makedirs(args.out, exist_ok=True)
             tag = f"_pods{args.pods}" if args.pods else ""

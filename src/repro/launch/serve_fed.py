@@ -13,6 +13,14 @@ schema-guarded ``BENCH_serve.json`` latency ledger at the repo root.
 ``--parity-check`` additionally asserts the served "historical" logits over
 every node are bit-identical to the training-side eval path before any
 traffic runs (the same invariant tests/test_serve.py pins).
+
+``--cache-dtype {fp32,bf16,int8}`` keeps the h1 embedding cache resident in
+the quantized wire format (repro.federated.quant) — bf16 halves and int8
+nearly quarters the resident bytes, dequantizing on read inside the
+bucketed query path. The ledger gains a ``cache`` column (dtype, resident
+bytes, test-split accuracy of the served logits) so BENCH_serve.json
+records accuracy next to latency for each format. ``--parity-check`` stays
+fp32-only: a quantized cache is lossy by design.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
 
 
 def build_args(argv=None) -> argparse.Namespace:
+    from repro.federated.quant import SYNC_DTYPES
     from repro.serve import CACHE_POLICIES, LOAD_MODES, SERVE_BACKENDS
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
@@ -58,10 +67,22 @@ def build_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory (default: a temp dir)")
     ap.add_argument("--out", default=os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    ap.add_argument("--cache-dtype", default="fp32",
+                    choices=list(SYNC_DTYPES),
+                    help="resident wire format of the h1 embedding cache "
+                         "(repro.federated.quant): bf16 halves and int8 "
+                         "nearly quarters the resident bytes; dequantized "
+                         "on read inside the bucketed query path")
     ap.add_argument("--parity-check", action="store_true",
                     help="assert served historical logits == training eval "
-                         "logits bit-for-bit before running traffic")
+                         "logits bit-for-bit before running traffic "
+                         "(fp32 cache only — a quantized cache is lossy "
+                         "by design)")
     args = ap.parse_args(argv)
+    if args.parity_check and args.cache_dtype != "fp32":
+        ap.error("--parity-check demands bit-identical logits; a "
+                 f"{args.cache_dtype} cache is lossy by design (the "
+                 "accuracy column in BENCH_serve.json tracks its effect)")
     args.scale = args.scale if args.scale is not None else (64 if args.quick else 8)
     args.rounds = args.rounds if args.rounds is not None else (3 if args.quick else 30)
     args.queries = args.queries if args.queries is not None else (200 if args.quick else 2000)
@@ -120,6 +141,20 @@ def parity_check(model, engine, graph, fed, state, seed: int) -> None:
     print(f"# parity-check: {n} nodes bit-identical to build_eval_graph")
 
 
+def serve_accuracy(engine, graph) -> float:
+    """Test-split accuracy of the served historical logits — the accuracy
+    half of the accuracy-vs-latency cache column. Runs through the warmed
+    bucketed query path, so a quantized cache pays its dequant-on-read and
+    its rounding here exactly as production queries would."""
+    n = graph.features.shape[0]
+    logits = np.concatenate([
+        engine.query(np.arange(i, min(i + 128, n)), policy="historical")
+        for i in range(0, n, 128)])
+    mask = np.asarray(graph.test_mask, bool)
+    pred = np.asarray(logits).argmax(-1)
+    return float((pred[mask] == np.asarray(graph.labels)[mask]).mean())
+
+
 def run_pipeline(args) -> dict:
     """The full train -> checkpoint -> restore -> serve pipeline. Returns the
     validated BENCH payload (and writes it to ``args.out``)."""
@@ -136,7 +171,8 @@ def run_pipeline(args) -> dict:
     g, fed, state = train_and_checkpoint(args, ckpt_dir)
 
     model = ServedModel.restore(ckpt_dir, g, fed, backend=args.backend,
-                                warm=args.warm, seed=args.seed)
+                                warm=args.warm, seed=args.seed,
+                                cache_dtype=args.cache_dtype)
     engine = QueryEngine(model, cache_policy=args.policy)
     n_traces = engine.warmup()
     print(f"# restored step {model.restored_step}; warmup compiled "
@@ -147,6 +183,20 @@ def run_pipeline(args) -> dict:
         # parity queries ran through the warmed buckets: must not retrace
         if engine.trace_count != engine.trace_count_after_warmup:
             raise AssertionError("parity check retraced a serve shape")
+
+    # the accuracy half of the cache column, measured on the warm cache
+    # before traffic mutates the graph
+    acc = serve_accuracy(engine, g)
+    cache_col = {
+        "cache_dtype": model.cache_dtype,
+        "resident_bytes": model.cache_resident_bytes(),
+        "serve_accuracy": acc,
+    }
+    print(f"# cache: {model.cache_dtype} "
+          f"{cache_col['resident_bytes']:,}B resident, "
+          f"test accuracy {acc:.4f}")
+    if engine.trace_count != engine.trace_count_after_warmup:
+        raise AssertionError("accuracy sweep retraced a serve shape")
 
     mix = ({"historical": 0.9, "fresh": 0.1} if args.policy == "historical"
            else {"fresh": 0.9, "historical": 0.1})
@@ -163,7 +213,8 @@ def run_pipeline(args) -> dict:
 
     payload = ledger.summary(backend=args.backend, devices=jax.device_count(),
                              quick=bool(args.quick), mode=args.mode,
-                             policy_mix=mix, model_summary=model.summary())
+                             policy_mix=mix, model_summary=model.summary(),
+                             cache=cache_col)
     problems = validate_bench_serve(payload)
     if problems:
         raise SystemExit("refusing to write invalid BENCH_serve.json:\n  "

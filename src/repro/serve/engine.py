@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.federated.quant import decode as quant_decode
+from repro.federated.quant import encode as quant_encode
 from repro.graph.csr import csr_from_padded
 from repro.models.gcn import _aggregate, _sage_layer
 from repro.serve.model import ServedModel
@@ -80,7 +82,7 @@ class QueryEngine:
         self.trace_count_after_warmup: int | None = None
         self._fn_hist = jax.jit(self._hist_impl)
         self._fn_fresh = jax.jit(self._fresh_impl)
-        self._fn_refresh = jax.jit(self._refresh_impl, donate_argnums=(2,))
+        self._fn_refresh = jax.jit(self._refresh_impl, donate_argnums=(2, 3))
 
     # ------------------------------------------------------------------
     # traced compute (one XLA program per bucket shape, cached by jit)
@@ -103,15 +105,19 @@ class QueryEngine:
             return block_spmm(adj, table).astype(table.dtype)
         return _aggregate(table, idx, mask)
 
-    def _hist_impl(self, params, h1, qrows, b_idx, b_mask, seg):
+    def _hist_impl(self, params, h1, h1s, qrows, b_idx, b_mask, seg):
         self.trace_count += 1
+        # dequant-on-read: the cache stays resident in its wire format;
+        # fp32 decode is the identity (bit-identical jaxpr to pre-codec)
+        h1 = quant_decode(h1, h1s, self.model.cache_dtype)
         agg1 = self._agg(h1, b_idx, b_mask, seg)
         h2 = _sage_layer(params, 1, h1[qrows], agg1)
         return h2 @ params["w_cls"] + params["b_cls"]
 
-    def _fresh_impl(self, params, feat, h1, qrows, b_idx, b_mask, seg_b,
+    def _fresh_impl(self, params, feat, h1, h1s, qrows, b_idx, b_mask, seg_b,
                     rrows, rvalid, r_idx, r_mask, seg_r):
         self.trace_count += 1
+        h1 = quant_decode(h1, h1s, self.model.cache_dtype)
         agg0 = self._agg(feat, r_idx, r_mask, seg_r)
         h1r = _sage_layer(params, 0, feat[rrows], agg0)
         fresh = jnp.where(rvalid[:, None] > 0, h1r, h1[rrows])
@@ -120,12 +126,23 @@ class QueryEngine:
         h2 = _sage_layer(params, 1, table1[qrows], agg1)
         return h2 @ params["w_cls"] + params["b_cls"]
 
-    def _refresh_impl(self, params, feat, h1, rrows, rvalid, r_idx, r_mask,
-                      seg):
+    def _refresh_impl(self, params, feat, h1, h1s, rrows, rvalid, r_idx,
+                      r_mask, seg):
         self.trace_count += 1
+        dt = self.model.cache_dtype
         agg0 = self._agg(feat, r_idx, r_mask, seg)
         h1r = _sage_layer(params, 0, feat[rrows], agg0)
-        return h1.at[rrows].set(jnp.where(rvalid[:, None] > 0, h1r, h1[rrows]))
+        if dt == "fp32":
+            return (h1.at[rrows].set(
+                jnp.where(rvalid[:, None] > 0, h1r, h1[rrows])), h1s)
+        # quantized cache: encode only the refreshed rows and scatter
+        # payload + scale — untouched rows keep their exact stored bits
+        qf, sf = quant_encode(h1r, dt)
+        h1 = h1.at[rrows].set(jnp.where(rvalid[:, None] > 0, qf, h1[rrows]))
+        if sf is not None:
+            h1s = h1s.at[rrows].set(
+                jnp.where(rvalid[:, None] > 0, sf, h1s[rrows]))
+        return h1, h1s
 
     # ------------------------------------------------------------------
     # host-side batching
@@ -183,8 +200,9 @@ class QueryEngine:
             seg_r = self._seg_operands(r_idx, r_mask)
             try:
                 logits = np.asarray(self._fn_fresh(
-                    model.params, model.feat, model.h1, q, b_idx, b_mask,
-                    seg_b, rrows, rvalid, r_idx, r_mask, seg_r))
+                    model.params, model.feat, model.h1, model.h1_scale, q,
+                    b_idx, b_mask, seg_b, rrows, rvalid, r_idx, r_mask,
+                    seg_r))
                 if self.fallback and not np.isfinite(logits[:n]).all():
                     raise ArithmeticError("non-finite fresh logits")
             except Exception:
@@ -196,8 +214,8 @@ class QueryEngine:
                 fell_back = True
                 policy = "historical"
         if policy == "historical":
-            logits = self._fn_hist(model.params, model.h1, q, b_idx, b_mask,
-                                   seg_b)
+            logits = self._fn_hist(model.params, model.h1, model.h1_scale, q,
+                                   b_idx, b_mask, seg_b)
         info = {"bucket": b, "real": n, "touched": len(touched),
                 "hit_rate": hit_rate, "policy": policy, "fell_back": fell_back}
         return np.asarray(logits)[:n], info
@@ -219,9 +237,10 @@ class QueryEngine:
             rrows = np.zeros(b, np.int32)
             rvalid = np.zeros(b, np.float32)
             r_idx, r_mask = model.store.neighbors(rrows)
-            model.h1 = self._fn_refresh(model.params, model.feat, model.h1,
-                                        rrows, rvalid, r_idx, r_mask,
-                                        self._seg_operands(r_idx, r_mask))
+            model.h1, model.h1_scale = self._fn_refresh(
+                model.params, model.feat, model.h1, model.h1_scale,
+                rrows, rvalid, r_idx, r_mask,
+                self._seg_operands(r_idx, r_mask))
         self.trace_count_after_warmup = self.trace_count
         return self.trace_count
 
@@ -337,8 +356,9 @@ class QueryEngine:
             rrows, rvalid = self._pad_rows(chunk, b)
             r_idx, r_mask = model.store.neighbors(rrows)
             seg = self._seg_operands(r_idx, r_mask)
-            model.h1 = self._fn_refresh(model.params, model.feat, model.h1,
-                                        rrows, rvalid, r_idx, r_mask, seg)
+            model.h1, model.h1_scale = self._fn_refresh(
+                model.params, model.feat, model.h1, model.h1_scale,
+                rrows, rvalid, r_idx, r_mask, seg)
             model.mark_written(chunk)
             total += len(chunk)
         return total

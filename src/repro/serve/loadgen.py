@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.federated.quant import SYNC_DTYPES
 from repro.serve.engine import CACHE_POLICIES, QueryEngine
 
 LOAD_MODES = ("open", "closed")
@@ -34,6 +35,10 @@ _TOP_KEYS = ("bench", "backend", "devices", "quick", "mode", "policy_mix",
              "batch_occupancy", "cache_hit_rate", "invalidation_rate",
              "rows_invalidated", "rows_refreshed", "buckets")
 _BUCKET_KEYS = ("bucket", "n", "p50_ms", "p99_ms")
+# the accuracy-vs-latency cache column (launch.serve_fed --cache-dtype):
+# optional in ad-hoc ledgers, but the committed BENCH_serve.json carries it
+# (tests/test_bench_schema.py pins that)
+_CACHE_KEYS = ("cache_dtype", "resident_bytes", "serve_accuracy")
 
 
 def _pctl(xs, q: float) -> float:
@@ -109,6 +114,23 @@ def validate_bench_serve(payload) -> list[str]:
     if isinstance(nq, int) and n_acc != nq and not errs:
         errs.append(f"bucket rows account for {n_acc} queries, "
                     f"n_queries says {nq}")
+    cache = payload.get("cache")
+    if cache is not None:
+        if not isinstance(cache, dict) or any(k not in cache
+                                              for k in _CACHE_KEYS):
+            errs.append(f"cache column missing keys (need {_CACHE_KEYS})")
+        else:
+            if cache["cache_dtype"] not in SYNC_DTYPES:
+                errs.append(f"cache.cache_dtype must be one of {SYNC_DTYPES}, "
+                            f"got {cache['cache_dtype']!r}")
+            rb = cache["resident_bytes"]
+            if not isinstance(rb, int) or rb < 1:
+                errs.append(f"cache.resident_bytes must be a positive int, "
+                            f"got {rb!r}")
+            acc = cache["serve_accuracy"]
+            if not isinstance(acc, (int, float)) or not 0.0 <= acc <= 1.0:
+                errs.append(f"cache.serve_accuracy must be in [0, 1], "
+                            f"got {acc!r}")
     return errs
 
 
@@ -155,7 +177,8 @@ class LatencyLedger:
 
     def summary(self, *, backend: str, devices: int, quick: bool, mode: str,
                 policy_mix: dict, model_summary: dict | None = None,
-                degraded: dict | None = None) -> dict:
+                degraded: dict | None = None,
+                cache: dict | None = None) -> dict:
         lat = [q.latency_ms for q in self.queries]
         by_bucket: dict[int, list] = {}
         by_policy: dict[str, list] = {}
@@ -196,6 +219,10 @@ class LatencyLedger:
         }
         if model_summary:
             payload["model"] = model_summary
+        if cache is not None:
+            # the accuracy-vs-latency column: which wire format the h1
+            # cache is resident in, what it costs, what accuracy it serves
+            payload["cache"] = dict(cache)
         if degraded is not None or self.rejects:
             # engine degradation counters + the requests this ledger shed
             payload["degraded"] = {"n_shed": self.rejects, **(degraded or {})}

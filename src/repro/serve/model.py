@@ -32,6 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_checkpoint, load_latest, save_checkpoint
+from repro.federated.quant import check_sync_dtype
+from repro.federated.quant import decode as quant_decode
+from repro.federated.quant import encode as quant_encode
 from repro.graph.csr import build_padded_neighbors, csr_from_padded
 from repro.models.gcn import HIDDEN, _sage_layer, gcn_init, neighbor_aggregate
 from repro.serve.updates import GraphStore
@@ -116,7 +119,8 @@ class ServedModel:
     def __init__(self, params, store: GraphStore, *, backend: str = "segment",
                  warm: str = "refresh", table_h1: np.ndarray | None = None,
                  table_age: np.ndarray | None = None,
-                 restored_step: int | None = None):
+                 restored_step: int | None = None,
+                 cache_dtype: str = "fp32"):
         if backend not in SERVE_BACKENDS:
             raise ValueError(f"unknown serve backend {backend!r}; "
                              f"known: {SERVE_BACKENDS}")
@@ -127,6 +131,11 @@ class ServedModel:
         self.backend = backend
         self.warm = warm
         self.restored_step = restored_step
+        # wire/residency format of the h1 cache (repro.federated.quant):
+        # `h1` holds the encoded payload (fp32 passthrough / bf16 / int8
+        # codes) and `h1_scale` the int8 per-row fp32 scales (else None).
+        # The query engine dequantizes on read inside its traced bodies.
+        self.cache_dtype = check_sync_dtype(cache_dtype)
         cap = store.capacity
         self.feat = jnp.asarray(store.features)              # (cap, F) device
         self.valid = np.zeros(cap, bool)
@@ -138,25 +147,37 @@ class ServedModel:
         self.n_refreshed = 0
 
         if warm == "refresh":
-            self.h1 = self.compute_layer1_full()
+            self.h1, self.h1_scale = self.encode_cache(self.compute_layer1_full())
             self.valid[: store.n_active] = True
         elif warm == "tables":
             if table_h1 is None:
                 raise ValueError("warm='tables' needs the scattered table_h1")
             h = np.zeros((cap, HIDDEN[0]), np.float32)
             h[: len(table_h1)] = table_h1
-            self.h1 = jnp.asarray(h)
+            self.h1, self.h1_scale = self.encode_cache(jnp.asarray(h))
             self.valid[: store.n_active] = True
         else:                                                # cold
-            self.h1 = jnp.zeros((cap, HIDDEN[0]), jnp.float32)
+            self.h1, self.h1_scale = self.encode_cache(
+                jnp.zeros((cap, HIDDEN[0]), jnp.float32))
 
     # -- construction ----------------------------------------------------
+
+    def encode_cache(self, h):
+        """Encode a fp32 (cap, H1) table into the resident cache format —
+        ``(payload, scale_or_None)`` per ``cache_dtype``."""
+        return quant_encode(h, self.cache_dtype)
+
+    def h1_f32(self) -> jnp.ndarray:
+        """The dequantized (cap, H1) cache — what the traced query bodies
+        read (identity for fp32)."""
+        return quant_decode(self.h1, self.h1_scale, self.cache_dtype)
 
     @classmethod
     def restore(cls, directory: str, graph, fed, *, step: int | None = None,
                 backend: str = "segment", warm: str = "refresh",
                 capacity: int | None = None, seed: int = 0,
-                headroom: float = 0.25) -> "ServedModel":
+                headroom: float = 0.25,
+                cache_dtype: str = "fp32") -> "ServedModel":
         """Load a federation checkpoint and build the serving state.
 
         ``seed`` must match the training engine's seed so the padded
@@ -175,7 +196,8 @@ class ServedModel:
         table_h1 = _scatter_tables(fed, tree["hist1"])
         table_age = _scatter_tables(fed, tree["age"]).astype(np.int64)
         return cls(tree["params"], store, backend=backend, warm=warm,
-                   table_h1=table_h1, table_age=table_age, restored_step=step)
+                   table_h1=table_h1, table_age=table_age, restored_step=step,
+                   cache_dtype=cache_dtype)
 
     # -- cache compute / bookkeeping -------------------------------------
 
@@ -225,6 +247,9 @@ class ServedModel:
         self.feat = jnp.asarray(self.store.features)
         self.h1 = jnp.zeros((cap, self.h1.shape[1]),
                             self.h1.dtype).at[:old].set(self.h1)
+        if self.h1_scale is not None:
+            self.h1_scale = jnp.zeros(
+                (cap, 1), self.h1_scale.dtype).at[:old].set(self.h1_scale)
         self.valid = np.concatenate([self.valid, np.zeros(cap - old, bool)])
         self.row_version = np.concatenate(
             [self.row_version, np.full(cap - old, self.step, np.int64)])
@@ -252,9 +277,19 @@ class ServedModel:
 
     def nonfinite_rows(self) -> np.ndarray:
         """Active cache rows holding any non-finite embedding — the health
-        probe chaos runs watch to prove poisoned refreshes never land."""
-        h = np.asarray(self.h1[: self.n_active])
+        probe chaos runs watch to prove poisoned refreshes never land.
+        Quantized caches are checked on their decoded values (a poisoned
+        int8 row surfaces through its NaN scale)."""
+        h = np.asarray(self.h1_f32()[: self.n_active], np.float32)
         return np.flatnonzero(~np.isfinite(h).all(axis=1))
+
+    def cache_resident_bytes(self) -> int:
+        """Device bytes the h1 cache actually holds resident (payload +
+        int8 scales) — the serve half of the quantized-sync ledger."""
+        total = int(self.h1.nbytes)
+        if self.h1_scale is not None:
+            total += int(self.h1_scale.nbytes)
+        return total
 
     def summary(self) -> dict:
         age = self.cache_age
@@ -272,6 +307,8 @@ class ServedModel:
             "rows_refreshed": self.n_refreshed,
             "h1_finite_frac": (1.0 - len(self.nonfinite_rows()) / self.n_active)
             if self.n_active else 1.0,
+            "cache_dtype": self.cache_dtype,
+            "cache_resident_bytes": self.cache_resident_bytes(),
         }
         if self.table_age is not None:
             out["table_age_mean"] = float(self.table_age.mean())

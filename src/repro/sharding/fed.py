@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.federated.quant import check_sync_dtype, quant_roundtrip
+
 CLIENT_AXIS = "clients"
 
 
@@ -152,7 +154,8 @@ def _client_step(vm, mesh: Mesh, axis: str, reduce: str):
 
 def build_sharded_chunk(vm, mesh: Mesh, axis: str, m_real: int,
                         light_stats: Sequence[str], *,
-                        reduce: str = "psum"):
+                        reduce: str = "psum",
+                        sync_dtype: str = "fp32"):
     """The sharded twin of FedEngine._build_fused_chunk: one jitted donated
     chunk scanning ``round_step`` over S rounds, with the vmapped client
     half shard-mapped over ``axis``.
@@ -166,9 +169,13 @@ def build_sharded_chunk(vm, mesh: Mesh, axis: str, m_real: int,
     ``"psum"`` (weighted all-reduce) or ``"pairwise"`` (fp32 fixed tree
     over gathered partials — the same ``merge_reduce`` knob the pod mesh
     honors, so 1-D meshes no longer silently fall back to psum).
+    ``sync_dtype`` round-trips the written-back float rows through the
+    repro.federated.quant codec (the write-back IS a wire in the real
+    deployment); ``"fp32"`` adds zero trace ops.
     """
     if reduce not in ("psum", "pairwise"):
         raise ValueError(f"unknown reduce {reduce!r}; known: psum | pairwise")
+    check_sync_dtype(sync_dtype)
     step = _client_step(vm, mesh, axis, reduce)
     light_stats = tuple(light_stats)
 
@@ -192,11 +199,16 @@ def build_sharded_chunk(vm, mesh: Mesh, axis: str, m_real: int,
                        hist1[sel], age[sel], ghost_feat[sel], prev_loss[sel],
                        tau, fanouts, eoff, keys, w)
             params, new_hist1, new_age, new_ghost_feat, stats = out
+            loss_wb = stats["loss_all"]
+            if sync_dtype != "fp32":
+                new_hist1 = quant_roundtrip(new_hist1, sync_dtype)
+                new_ghost_feat = quant_roundtrip(new_ghost_feat, sync_dtype)
+                loss_wb = quant_roundtrip(loss_wb, sync_dtype)
             # out-of-range padding ids make these scatters drop, never land
             hist1 = hist1.at[sel].set(new_hist1)
             age = age.at[sel].set(new_age)
             ghost_feat = ghost_feat.at[sel].set(new_ghost_feat)
-            prev_loss = prev_loss.at[sel].set(stats["loss_all"])
+            prev_loss = prev_loss.at[sel].set(loss_wb)
             light = {k: stats[k][:m_real] for k in light_stats}
             return (params, hist1, age, ghost_feat, prev_loss, key), light
 

@@ -57,6 +57,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.federated.partition import GhostBuckets, pod_table_padding
+from repro.federated.quant import check_sync_dtype
+from repro.federated.quant import decode as quant_decode
+from repro.federated.quant import encode as quant_encode
 from repro.sharding.fed import CLIENT_AXIS, pairwise_sum, weighted_merge
 
 __all__ = [
@@ -148,12 +151,21 @@ def sync_round_gates(eoffs, tau: int, local_epochs: int, *,
     return (((eoffs[:, None] + j) % t) == 0).any(axis=1)
 
 
-def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
+def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str,
+              sync_dtype: str = "fp32"):
     """The per-round client half over a ``("pods", "clients")`` mesh:
     owner-keyed cohort fetch of static arrays + table rows, the gated ghost
     exchange, vmapped LocalUpdate on each device's cohort slice, weighted
     merge, and the bucket-routed write-back. Pod-sharded in/out specs are
-    P("pods"); cohort specs P(("pods", "clients")); routing replicated."""
+    P("pods"); cohort specs P(("pods", "clients")); routing replicated.
+
+    ``sync_dtype`` quantizes the two embedding wires (repro.federated.
+    quant): the gated ghost all-to-all and the write-back bucket exchange
+    physically move codec payloads (int8 codes + per-row fp32 scales, or
+    bf16 halves) and decode at the receiver. The int32 ``age`` table and
+    the routing metadata always ride unquantized; merge accumulators stay
+    fp32. ``"fp32"`` leaves the lowered collectives byte-identical."""
+    check_sync_dtype(sync_dtype)
     P_, C = mesh.shape[POD_AXIS], mesh.shape[CLIENT_AXIS]
     rpp = buckets.rows_per_pod
     axes = (POD_AXIS, CLIENT_AXIS)
@@ -204,7 +216,15 @@ def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
             # send_* arrive (1, P, B) — this pod's row of the (P, P, B) plan
             sc, sr, sm = send_client[0], send_row[0], send_mask[0]
             sbuf = hist_sh[sc, sr] * sm[..., None]              # (P, B, H1)
-            rbuf = jax.lax.all_to_all(sbuf, POD_AXIS, 0, 0, tiled=True)
+            # the all-to-all moves codec payloads (int8 codes + per-row
+            # fp32 scales / bf16 halves) and decodes at the receiver; per-
+            # row encoding commutes with the send gather, so the decoded
+            # rows equal the "tables"-mode pull's round-trip bit-for-bit
+            q, s = quant_encode(sbuf, sync_dtype)
+            rq = jax.lax.all_to_all(q, POD_AXIS, 0, 0, tiled=True)
+            rs = (jax.lax.all_to_all(s, POD_AXIS, 0, 0, tiled=True)
+                  if s is not None else None)
+            rbuf = quant_decode(rq, rs, sync_dtype)
             gh_res = rbuf[recv_src, recv_pos] * recv_mask[..., None]
             return cohort_fetch(gh_res), cohort_fetch(gsrc)
 
@@ -234,13 +254,25 @@ def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
         tgt = jax.lax.dynamic_slice_in_dim(wrecv, p_i, 1, 0)[0].reshape(-1)
         cap = wrecv.shape[-1]
 
-        def write_back(table, fresh):
-            rows = jax.lax.all_gather(fresh, CLIENT_AXIS, axis=0, tiled=True)
-            sbuf = jnp.zeros((P_, cap) + rows.shape[1:], rows.dtype)
+        def route(x):
+            rows = jax.lax.all_gather(x, CLIENT_AXIS, axis=0, tiled=True)
+            sbuf = jnp.zeros((P_, cap) + rows.shape[1:], x.dtype)
             sbuf = sbuf.at[dst, pos].set(rows)
             rbuf = jax.lax.all_to_all(sbuf, POD_AXIS, 0, 0, tiled=True)
-            return table.at[tgt].set(
-                rbuf.reshape((P_ * cap,) + rbuf.shape[2:]))
+            return rbuf.reshape((P_ * cap,) + rbuf.shape[2:])
+
+        def write_back(table, fresh):
+            # float tables ride the exchange as codec payloads (codes +
+            # scales both take the gather/scatter/all-to-all route); the
+            # int32 age table and the fp32 passthrough skip the codec
+            if sync_dtype != "fp32" and jnp.issubdtype(fresh.dtype, jnp.floating):
+                q, s = quant_encode(fresh, sync_dtype)
+                rows = quant_decode(route(q),
+                                    route(s) if s is not None else None,
+                                    sync_dtype)
+            else:
+                rows = route(fresh)
+            return table.at[tgt].set(rows)
 
         hist_sh = write_back(hist_sh, new_hist1)
         age_sh = write_back(age_sh, new_age)
@@ -260,7 +292,8 @@ def _pod_step(vm, mesh: Mesh, buckets: GhostBuckets, reduce: str):
 def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
                             buckets: GhostBuckets,
                             light_stats: Sequence[str], *,
-                            reduce: str = "psum"):
+                            reduce: str = "psum",
+                            sync_dtype: str = "fp32"):
     """The pod-sharded twin of ``sharding.fed.build_sharded_chunk``: one
     jitted donated chunk scanning ``round_step`` over S rounds with the
     historical tables AND static client arrays resident as pod shards.
@@ -276,10 +309,12 @@ def build_pod_sharded_chunk(vm, mesh: Mesh, m_real: int,
     ``ghost_source="prefetched"`` vmapped LocalUpdate. Cohort padding uses
     dummy id ``n_clients_padded`` (no owner pod: fetches zero, write-backs
     drop). ``reduce`` picks the merge: ``"psum"`` (weighted all-reduce) or
-    ``"pairwise"`` (fp32 tree)."""
+    ``"pairwise"`` (fp32 tree). ``sync_dtype`` quantizes the ghost
+    all-to-all and write-back exchanges on the physical wire (``vm`` must
+    be built with the same ``sync_dtype`` so all executors agree)."""
     if reduce not in ("psum", "pairwise"):
         raise ValueError(f"unknown reduce {reduce!r}; known: psum | pairwise")
-    step = _pod_step(vm, mesh, buckets, reduce)
+    step = _pod_step(vm, mesh, buckets, reduce, sync_dtype)
     light_stats = tuple(light_stats)
     bkt = tuple(jnp.asarray(a) for a in (
         buckets.send_client, buckets.send_row, buckets.send_mask,

@@ -232,13 +232,14 @@ from repro.launch.fed_dryrun import (  # noqa: E402
 )
 
 
-def dryrun_result(clients=16, rpp_scale=1):
+def dryrun_result(clients=16, rpp_scale=1, sync_dtype="fp32"):
     """A --pods dry-run result row built from the real ledger function over
     a synthetic topology (no XLA lowering needed)."""
     b = synthetic_ghost_buckets(clients, 8, 4, 2)
     ledger = pod_placement_ledger(b, n_pods=2, cohort_pad=8, wb_cap=4,
                                   n_max=8, g_max=4, n_feat=8, n_classes=3,
-                                  tau=8, local_epochs=4)
+                                  tau=8, local_epochs=4,
+                                  sync_dtype=sync_dtype)
     ledger["all_to_all_bytes"] = 1000
     ledger["all_gather_bytes"] = 500
     return {
@@ -431,3 +432,186 @@ def test_assert_k_flat_catches_k_scaling():
     a, b = dryrun_result(clients=16), dryrun_result(clients=64)
     b["collectives"]["all-gather"] *= 3
     assert any("all-gather" in e for e in assert_k_flat(a, b))
+
+
+# ---------------------------------------------------------------------------
+# quantized-sync columns: BENCH_round quant_ablation rows, the BENCH_serve
+# cache column, the dry-run ledger's quant section + assert_quant_bytes
+# ---------------------------------------------------------------------------
+
+from repro.federated.quant import SYNC_DTYPES  # noqa: E402
+from repro.launch.fed_dryrun import assert_quant_bytes  # noqa: E402
+
+
+def quant_rows(tau=2):
+    """A minimal valid quant_ablation pair: the fp32 baseline + one lossy
+    dtype at the same tau (what --quant-ablation writes per grid point)."""
+    base = {"variant": "quant_ablation", "tau": tau, "rounds": 20,
+            "clients": 256, "cohort": 4, "test_acc": 0.97}
+    return [
+        dict(base, sync_dtype="fp32", embed_wire_bytes=1000.0,
+             embed_fp32_bytes=1000.0, wire_reduction=1.0),
+        dict(base, sync_dtype="int8", embed_wire_bytes=255.0,
+             embed_fp32_bytes=1000.0, wire_reduction=3.92),
+    ]
+
+
+def test_quant_ablation_rows_validate():
+    p = good_payload()
+    p["rows"] += quant_rows()
+    assert validate_bench_round(p) == []
+
+
+def test_quant_ablation_row_errors():
+    p = good_payload()
+    p["rows"] += quant_rows()
+    p["rows"][-1]["sync_dtype"] = "fp8"
+    assert any("sync_dtype" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["rows"] += quant_rows()
+    p["rows"][-1]["tau"] = 0
+    assert any("tau" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["rows"] += quant_rows()
+    p["rows"][-1]["test_acc"] = 1.2
+    assert any("test_acc" in e for e in validate_bench_round(p))
+    # wire bytes above the fp32 nominal: quantization cannot cost bytes
+    p = good_payload()
+    p["rows"] += quant_rows()
+    p["rows"][-1]["embed_wire_bytes"] = 2000.0
+    assert any("embed_wire_bytes" in e for e in validate_bench_round(p))
+    # the fp32 baseline row must be bit-inert on the wire
+    p = good_payload()
+    p["rows"] += quant_rows()
+    p["rows"][-2]["embed_wire_bytes"] = 999.0
+    assert any("fp32" in e for e in validate_bench_round(p))
+
+
+def test_quant_ablation_requires_fp32_baseline_per_tau():
+    # an int8 row at tau=8 with no fp32 companion: the reduction column
+    # has nothing to be relative to
+    p = good_payload()
+    p["rows"] += quant_rows() + [quant_rows(tau=8)[1]]
+    assert any("tau=8" in e and "fp32" in e for e in validate_bench_round(p))
+    p["rows"].append(quant_rows(tau=8)[0])
+    assert validate_bench_round(p) == []
+
+
+def test_checked_in_bench_round_carries_quant_ablation():
+    """The committed ledger must keep its accuracy-vs-bytes rows — a merge
+    that drops them would pass the validator (they are optional rows) but
+    silently lose the ablation; this pin and CI's bench-schema job refuse."""
+    with open(os.path.join(REPO_ROOT, "BENCH_round.json")) as f:
+        rows = [r for r in json.load(f)["rows"]
+                if r.get("variant") == "quant_ablation"]
+    assert rows, "BENCH_round.json lost its quant_ablation rows"
+    assert {r["sync_dtype"] for r in rows} == set(SYNC_DTYPES)
+
+
+def serve_cache_col(dtype="int8"):
+    return {"cache_dtype": dtype, "resident_bytes": 100100,
+            "serve_accuracy": 0.94}
+
+
+def test_serve_cache_column_validates():
+    for d in SYNC_DTYPES:
+        p = good_serve_payload()
+        p["cache"] = serve_cache_col(d)
+        assert validate_bench_serve(p) == [], d
+
+
+def test_serve_cache_column_errors():
+    p = good_serve_payload()
+    p["cache"] = "int8"
+    assert any("cache" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["cache"] = serve_cache_col("fp16")
+    assert any("cache_dtype" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["cache"] = serve_cache_col()
+    p["cache"]["resident_bytes"] = 0
+    assert any("resident_bytes" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["cache"] = serve_cache_col()
+    p["cache"]["serve_accuracy"] = 1.01
+    assert any("serve_accuracy" in e for e in validate_bench_serve(p))
+    p = good_serve_payload()
+    p["cache"] = serve_cache_col()
+    del p["cache"]["serve_accuracy"]
+    assert any("serve_accuracy" in e for e in validate_bench_serve(p))
+
+
+def test_checked_in_bench_serve_carries_cache_column():
+    path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    if not os.path.exists(path):
+        import pytest
+        pytest.skip("no BENCH_serve.json checked in")
+    with open(path) as f:
+        cache = json.load(f).get("cache")
+    assert isinstance(cache, dict), "BENCH_serve.json lost its cache column"
+    assert cache["cache_dtype"] in SYNC_DTYPES
+
+
+def test_dryrun_quant_section_validates_per_dtype():
+    for d in SYNC_DTYPES:
+        r = dryrun_result(sync_dtype=d)
+        assert validate_fed_dryrun(r) == [], d
+        wire = r["pods"]["quant"]["wire_collective_bytes"]
+        fp32w = r["pods"]["quant"]["fp32_collective_bytes"]
+        if d == "fp32":
+            assert wire == fp32w
+        else:
+            assert all(wire[k] < fp32w[k] for k in wire)
+
+
+def test_dryrun_quant_section_errors():
+    r = dryrun_result()
+    del r["pods"]["quant"]
+    assert any("quant" in e for e in validate_fed_dryrun(r))
+    r = dryrun_result()
+    r["pods"]["quant"]["sync_dtype"] = "fp8"
+    assert any("sync_dtype" in e for e in validate_fed_dryrun(r))
+    # a wire entry above its fp32 nominal
+    r = dryrun_result(sync_dtype="int8")
+    ga = r["pods"]["quant"]["fp32_collective_bytes"]["ghost_all_to_all"]
+    r["pods"]["quant"]["wire_collective_bytes"]["ghost_all_to_all"] = ga + 1
+    assert any("exceeds" in e for e in validate_fed_dryrun(r))
+    # the fp32 column drifting from the nominal ledger entry
+    r = dryrun_result()
+    r["pods"]["quant"]["fp32_collective_bytes"]["wb_stage1_all_gather"] += 8
+    assert any("restate" in e for e in validate_fed_dryrun(r))
+    # at fp32 the wire must be bit-inert (wire == fp32 column)
+    r = dryrun_result()
+    r["pods"]["quant"]["wire_collective_bytes"]["ghost_all_to_all"] //= 2
+    assert any("bit-inert" in e for e in validate_fed_dryrun(r))
+
+
+def _quant_pair():
+    """fp32/int8 dry-run results satisfying the assert_quant_bytes contract
+    (the real ledgers provide the analytic halving; the fake HLO collectives
+    are scaled by hand)."""
+    a = dryrun_result()
+    b = dryrun_result(sync_dtype="int8")
+    b["collectives"] = {"all-gather": 125, "all-reduce": 2000}
+    return a, b
+
+
+def test_assert_quant_bytes_passes_on_halved_wires():
+    a, b = _quant_pair()
+    assert assert_quant_bytes(a, b) == []
+
+
+def test_assert_quant_bytes_catches_violations():
+    # an analytic wire entry that did not halve
+    a, b = _quant_pair()
+    b["pods"]["quant"]["wire_collective_bytes"]["ghost_all_to_all"] = \
+        a["pods"]["quant"]["wire_collective_bytes"]["ghost_all_to_all"]
+    assert any("ghost_all_to_all" in e for e in assert_quant_bytes(a, b))
+    # lowered HLO bytes that did not halve (the codec never reached XLA)
+    a, b = _quant_pair()
+    b["collectives"]["all-gather"] = 300
+    assert any("all-gather" in e for e in assert_quant_bytes(a, b))
+    # residents must stay fp32: a narrowed table shard is a contract breach
+    a, b = _quant_pair()
+    b["pods"]["per_device_resident_bytes"]["k_sharded"]["hist1"] //= 4
+    assert any("resident" in e for e in assert_quant_bytes(a, b))

@@ -1,0 +1,377 @@
+"""Quantized embedding sync (repro.federated.quant) — codec + parity tier.
+
+Three layers of contract:
+
+* **codec properties** — per-dtype round-trip error bounds (hypothesis
+  property tests over random rows plus hand-built adversarial rows:
+  all-zero, single-outlier, denormal), int8 code idempotence, and the
+  analytic ``wire_bytes`` accounting the dryrun/bench ledgers charge;
+* **fp32 bit-inertness** — ``sync_dtype="fp32"`` is a Python-level
+  passthrough, so an engine built with it replays the byte-identical
+  history of an engine that never heard of the codec;
+* **executor + serve parity** — bf16/int8 histories agree across the
+  stepwise/fused/client-sharded/pod-sharded executors (discrete columns
+  exact, losses allclose), and the quantized serving ``h1`` cache shrinks
+  resident bytes by the advertised factor while still serving the same
+  predictions.
+
+CI's ``quant`` lane runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the multi-device
+parity tests skip on a single-device host.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypcompat import HAVE_HYPOTHESIS, given, settings, st
+from repro.api import FedEngine, SyncScheduler, method_config
+from repro.federated.quant import (
+    SYNC_DTYPES,
+    check_sync_dtype,
+    decode,
+    encode,
+    quant_roundtrip,
+    wire_bytes,
+)
+
+pytestmark = pytest.mark.quant
+
+N_DEV = len(jax.devices())
+needs_devices = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs >=8 devices; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+EXACT_KEYS = ("tau", "comm_total", "comm_embed", "flops", "wall_clock")
+CLOSE_KEYS = ("test_acc", "test_loss")
+
+LOSSY = ("bf16", "int8")
+
+
+def rt(x, dtype):
+    return np.asarray(quant_roundtrip(jnp.asarray(x, jnp.float32), dtype))
+
+
+# ---------------------------------------------------------------------------
+# codec: dtype registry + fp32 passthrough
+# ---------------------------------------------------------------------------
+
+def test_sync_dtype_registry():
+    assert SYNC_DTYPES == ("fp32", "bf16", "int8")
+    for d in SYNC_DTYPES:
+        assert check_sync_dtype(d) == d
+    with pytest.raises(ValueError, match="sync dtype"):
+        check_sync_dtype("fp8")
+    with pytest.raises(ValueError, match="sync dtype"):
+        check_sync_dtype(None)
+
+
+def test_fp32_is_python_level_identity():
+    """encode/decode/roundtrip at fp32 return the SAME object — zero trace
+    ops, which is what makes sync_dtype='fp32' bit-inert through jit."""
+    x = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    payload, scale = encode(x, "fp32")
+    assert payload is x and scale is None
+    assert decode(payload, scale, "fp32") is x
+    assert quant_roundtrip(x, "fp32") is x
+
+
+# ---------------------------------------------------------------------------
+# codec: wire_bytes — the analytic accounting every ledger charges
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_per_dtype():
+    assert wire_bytes((4, 8), "fp32") == 4 * 8 * 4
+    assert wire_bytes((4, 8), "bf16") == 4 * 8 * 2
+    # int8: one byte per element + one fp32 scale per row (last axis = row)
+    assert wire_bytes((4, 8), "int8") == 4 * 8 + 4 * 4
+    assert wire_bytes((8,), "int8") == 8 + 4          # 1-d = a single row
+    assert wire_bytes((3, 4, 8), "int8") == 3 * 4 * 8 + 3 * 4 * 4
+    # wide rows approach the full 4x cut; narrow rows pay the scale tax
+    wide = wire_bytes((1, 4096), "fp32") / wire_bytes((1, 4096), "int8")
+    narrow = wire_bytes((1, 4), "fp32") / wire_bytes((1, 4), "int8")
+    assert wide > 3.99 and narrow == 2.0
+
+
+def test_wire_bytes_monotone_and_positive():
+    # rows of >=4 elements: below that, int8's 4 B/row scale tax can cost
+    # more than the narrowing saves (a (1, 1) row is 5 B int8 vs 4 B fp32)
+    for shape in ((1, 4), (7, 8), (2, 64), (5, 1, 9)):
+        sizes = [wire_bytes(shape, d) for d in SYNC_DTYPES]
+        assert sizes == sorted(sizes, reverse=True)   # fp32 >= bf16 >= int8
+        assert all(s > 0 for s in sizes)
+
+
+# ---------------------------------------------------------------------------
+# codec: round-trip error bounds
+# ---------------------------------------------------------------------------
+
+def test_bf16_roundtrip_relative_error_bound(rng):
+    x = rng.standard_normal((64, 32)).astype(np.float32) * 10.0
+    err = np.abs(rt(x, "bf16") - x)
+    # bfloat16 keeps 8 significand bits: round-to-nearest relative error
+    # is at most 2^-9 per element (2^-8 with margin)
+    assert (err <= np.abs(x) * 2.0 ** -8 + 1e-30).all()
+
+
+def test_int8_roundtrip_error_bound(rng):
+    x = rng.standard_normal((64, 32)).astype(np.float32) * 5.0
+    err = np.abs(rt(x, "int8") - x)
+    amax = np.abs(x).max(-1, keepdims=True)
+    # symmetric per-row scale = amax/127; round-half-even costs at most
+    # scale/2 = amax/254 per element (tiny slack for the fp32 division)
+    assert (err <= amax / 254.0 * (1 + 1e-5) + 1e-30).all()
+
+
+def test_int8_adversarial_rows():
+    x = np.zeros((4, 8), np.float32)
+    x[1, 3] = 1e6                      # single outlier, rest exact zeros
+    x[2] = 1.5e-42                     # denormal row (below FLT_MIN)
+    x[3] = np.linspace(-3.0, 3.0, 8)   # plain row
+    payload, scale = encode(jnp.asarray(x), "int8")
+    out = np.asarray(decode(payload, scale, "int8"))
+    assert np.isfinite(out).all()
+    # all-zero row: scale 0, decodes to EXACT zeros (masks commute)
+    assert (np.asarray(scale)[0] == 0) and (out[0] == 0).all()
+    # outlier row: the outlier is the amax -> code ±127, exact round-trip
+    # to ~1 ulp of scale; the zero elements stay exactly zero
+    assert np.isclose(out[1, 3], 1e6, rtol=1e-6)
+    assert (out[1, :3] == 0).all() and (out[1, 4:] == 0).all()
+    # denormal row: the scale itself lands in the subnormal range where its
+    # own quantization (or an FTZ flush to the zero-row path) dominates —
+    # the contract is boundedness, not precision: finite, never amplified
+    assert (np.abs(out[2]) <= x[2] * 1.1).all()
+    # plain row obeys the scale/2 bound
+    assert (np.abs(out[3] - x[3]) <= 3.0 / 254.0 * (1 + 1e-5)).all()
+
+
+def test_int8_codes_idempotent(rng):
+    """Re-encoding a decoded row reproduces the int8 codes exactly — the
+    property that lets executors quantize both at the semantic site and on
+    a physical collective without compounding error."""
+    x = jnp.asarray(rng.standard_normal((16, 24)).astype(np.float32))
+    q1, s1 = encode(x, "int8")
+    y = decode(q1, s1, "int8")
+    q2, s2 = encode(y, "int8")
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-7)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(decode(q2, s2, "int8")))
+
+
+# ---------------------------------------------------------------------------
+# codec: hypothesis property tests (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _elem = st.floats(min_value=-1e6, max_value=1e6,
+                      allow_nan=False, allow_infinity=False, width=32)
+    _row = st.lists(_elem, min_size=1, max_size=32)
+    # rectangular matrices: draw a width, then rows of exactly that width
+    _matrix = st.integers(min_value=1, max_value=16).flatmap(
+        lambda w: st.lists(st.lists(_elem, min_size=w, max_size=w),
+                           min_size=1, max_size=6))
+else:  # stubbed strategies; @given skips each test at run time
+    _row = _matrix = None
+
+
+@settings(max_examples=50, deadline=None)
+@given(_matrix)
+def test_hyp_int8_per_row_scale_and_bound(rows):
+    x = np.asarray(rows, np.float32)
+    payload, scale = encode(jnp.asarray(x), "int8")
+    scale = np.asarray(scale)
+    amax = np.abs(x).max(-1, keepdims=True)
+    # the scale is exactly the fp32 quotient amax/127, rows independent
+    # (checked away from the subnormal range, where XLA may flush to zero)
+    normal = amax[:, 0] > 1e-35
+    np.testing.assert_array_equal(scale[normal],
+                                  (amax / np.float32(127.0))[normal])
+    out = np.asarray(decode(payload, scale, "int8"))
+    assert np.isfinite(out).all()
+    assert (np.abs(out - x) <= amax / 254.0 * (1 + 1e-5) + 1e-30).all()
+    assert (out[amax[:, 0] == 0] == 0).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(_row)
+def test_hyp_bf16_bound_and_fp32_exact(row):
+    x = np.asarray([row], np.float32)
+    err = np.abs(rt(x, "bf16") - x)
+    assert (err <= np.abs(x) * 2.0 ** -8 + 1e-30).all()
+    np.testing.assert_array_equal(rt(x, "fp32"), x)
+
+
+# ---------------------------------------------------------------------------
+# engine: fp32 bit-inertness + lossy-dtype parity across executors
+# ---------------------------------------------------------------------------
+
+def _run(g, fed, *, mesh=None, m=4, rounds=4, seed=0, **kw):
+    eng = FedEngine(g, fed, method_config("fedais", tau0=4), seed=seed,
+                    rounds=rounds, clients_per_round=m, eval_every=2,
+                    mesh=mesh, **kw)
+    return eng, eng.run()
+
+
+def _assert_allclose_history(ref, got):
+    for k in EXACT_KEYS:
+        assert ref.history[k] == got.history[k], f"history[{k!r}] diverged"
+    for k in CLOSE_KEYS:
+        np.testing.assert_allclose(
+            np.asarray(got.history[k], np.float64),
+            np.asarray(ref.history[k], np.float64),
+            rtol=1e-4, atol=1e-6, err_msg=f"history[{k!r}]")
+
+
+def test_engine_rejects_unknown_sync_dtype(small_fed):
+    g, fed = small_fed
+    with pytest.raises(ValueError, match="sync dtype"):
+        FedEngine(g, fed, method_config("fedais"), sync_dtype="fp16")
+
+
+def test_fp32_sync_dtype_is_bit_inert(small_fed):
+    """sync_dtype='fp32' must replay the history of an engine that never
+    passed the argument, bit-for-bit — the codec lowers to nothing."""
+    g, fed = small_fed
+    _, base = _run(g, fed)
+    _, fp32 = _run(g, fed, sync_dtype="fp32")
+    assert base.history == fp32.history
+    assert base.final == fp32.final
+
+
+@pytest.mark.parametrize("dtype", LOSSY)
+def test_stepwise_matches_fused_per_dtype(small_fed, dtype):
+    """The stepwise and fused executors quantize at the same semantic site
+    (the write-back rows), so their histories agree within ~1 ulp of the
+    re-derived int8 scale (bf16 lands bitwise; int8 may differ in the last
+    float of the loss) — discrete columns stay exact either way."""
+    g, fed = small_fed
+    _, step = _run(g, fed, sync_dtype=dtype,
+                   scheduler=SyncScheduler(fused=False))
+    _, fused = _run(g, fed, sync_dtype=dtype,
+                    scheduler=SyncScheduler(fused=None))
+    _assert_allclose_history(step, fused)
+
+
+def test_int8_perturbs_trajectory_but_converges(small_fed):
+    """int8 is genuinely lossy — the loss trajectory must move — while the
+    run still trains (finite losses, sane final accuracy)."""
+    g, fed = small_fed
+    _, fp32 = _run(g, fed, rounds=6)
+    _, int8 = _run(g, fed, rounds=6, sync_dtype="int8")
+    assert int8.history["test_loss"] != fp32.history["test_loss"]
+    assert np.isfinite(int8.history["test_loss"]).all()
+    assert abs(int8.final["acc"] - fp32.final["acc"]) < 0.2
+
+
+@needs_devices
+@pytest.mark.parametrize("dtype", LOSSY)
+def test_executor_parity_quantized(small_fed, dtype):
+    """bf16/int8: fused vs client-sharded vs pod-sharded — same quantized
+    rows enter the tables everywhere, so discrete columns stay exact and
+    losses allclose, exactly as in the fp32 parity tier."""
+    from repro.sharding.fed import make_client_mesh
+    from repro.sharding.tables import make_pod_mesh
+
+    g, fed = small_fed
+    eng_f, res_f = _run(g, fed, sync_dtype=dtype)
+    eng_c, res_c = _run(g, fed, sync_dtype=dtype, mesh=make_client_mesh(8))
+    eng_p, res_p = _run(g, fed, sync_dtype=dtype, mesh=make_pod_mesh(4, 2))
+    assert eng_f.last_executor == "fused"
+    assert eng_c.last_executor == "sharded_fused"
+    assert eng_p.last_executor == "pod_sharded"
+    _assert_allclose_history(res_f, res_c)
+    _assert_allclose_history(res_f, res_p)
+
+
+@needs_devices
+def test_pod_gated_rounds_stay_gated_under_int8(small_fed):
+    """tau0=8 gates the ghost exchange off on some rounds; quantizing the
+    wire must not change WHICH rounds sync (comm bytes stay exact vs the
+    int8 fused run)."""
+    from repro.sharding.tables import make_pod_mesh
+
+    g, fed = small_fed
+    _, res_f = _run(g, fed, sync_dtype="int8",
+                    scheduler=SyncScheduler(fused=None))
+    eng_p, res_p = _run(g, fed, sync_dtype="int8", mesh=make_pod_mesh(2, 4))
+    assert eng_p.last_executor == "pod_sharded"
+    _assert_allclose_history(res_f, res_p)
+
+
+# ---------------------------------------------------------------------------
+# serve: quantized resident h1 cache
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """A tiny trained + checkpointed federation for cache-dtype tests."""
+    from repro.federated.partition import partition_graph
+    from repro.graph.data import make_dataset
+    from repro.serve import save_federation
+
+    g = make_dataset("pubmed", scale=32, seed=0)
+    fed = partition_graph(g, 4, alpha=0.5, seed=0)
+    eng = FedEngine(g, fed, method_config("fedais", tau0=2), rounds=2,
+                    clients_per_round=2, seed=0, eval_every=2)
+    state = eng.init_state()
+    eng.run(state)
+    ckpt = str(tmp_path_factory.mktemp("quant_ckpt"))
+    save_federation(ckpt, 2, state)
+    return g, fed, ckpt
+
+
+def _serve_logits(model):
+    from repro.serve import QueryEngine
+
+    engine = QueryEngine(model)
+    engine.warmup()
+    n = model.n_active
+    return np.concatenate([
+        engine.query(np.arange(i, min(i + 64, n)), policy="historical")
+        for i in range(0, n, 64)])
+
+
+def test_cache_dtype_resident_bytes(served):
+    from repro.serve import ServedModel
+
+    g, fed, ckpt = served
+    models = {d: ServedModel.restore(ckpt, g, fed, seed=0, cache_dtype=d)
+              for d in SYNC_DTYPES}
+    cap = models["fp32"].store.capacity
+    H1 = models["fp32"].h1.shape[-1]
+    assert models["fp32"].cache_resident_bytes() == cap * H1 * 4
+    assert models["bf16"].cache_resident_bytes() == cap * H1 * 2
+    assert models["int8"].cache_resident_bytes() == cap * H1 + cap * 4
+    for d, m in models.items():
+        s = m.summary()
+        assert s["cache_dtype"] == d
+        assert s["cache_resident_bytes"] == m.cache_resident_bytes()
+        assert np.isfinite(np.asarray(m.h1_f32())).all()
+
+
+def test_cache_fp32_restore_is_bit_inert(served):
+    from repro.serve import ServedModel
+
+    g, fed, ckpt = served
+    base = ServedModel.restore(ckpt, g, fed, seed=0)
+    fp32 = ServedModel.restore(ckpt, g, fed, seed=0, cache_dtype="fp32")
+    np.testing.assert_array_equal(np.asarray(base.h1), np.asarray(fp32.h1))
+    np.testing.assert_array_equal(_serve_logits(base), _serve_logits(fp32))
+
+
+@pytest.mark.parametrize("dtype", LOSSY)
+def test_quantized_cache_serves_same_predictions(served, dtype):
+    """Dequant-on-read: the lossy cache may move logits a little but the
+    served predictions stay overwhelmingly the ones the fp32 cache serves
+    (the BENCH_serve cache column's accuracy is measured the same way)."""
+    from repro.serve import ServedModel
+
+    g, fed, ckpt = served
+    want = _serve_logits(ServedModel.restore(ckpt, g, fed, seed=0))
+    got = _serve_logits(
+        ServedModel.restore(ckpt, g, fed, seed=0, cache_dtype=dtype))
+    assert got.shape == want.shape and np.isfinite(got).all()
+    agree = (got.argmax(-1) == want.argmax(-1)).mean()
+    assert agree >= 0.95, f"{dtype}: argmax agreement {agree:.3f}"
