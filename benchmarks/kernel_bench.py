@@ -1,8 +1,19 @@
 """Kernel-layer microbenchmarks: us_per_call of the XLA reference paths on
 CPU (the Pallas kernels target TPU; interpret-mode timing is not meaningful,
 so what we time here is the jnp oracle each kernel must beat on-device) plus
-allclose deltas kernel-vs-oracle."""
+allclose deltas kernel-vs-oracle.
+
+``--autotune-spmm`` instead sweeps block-size candidates for the SpMM
+kernel over the shapes ``AUTOTUNE_TABLE`` covers (wall-clock of the full
+``block_spmm`` call at each candidate, interpret mode off-TPU) and reports
+the winner next to the committed table entry — the measurement the table's
+entries come from. Exit status flags stale entries so the table can't
+silently rot.
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +22,14 @@ import numpy as np
 from benchmarks.common import timed
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.spmm.ops import block_spmm
+from repro.kernels.spmm.ops import (
+    AUTOTUNE_TABLE,
+    _pow2ceil,
+    adjacency_block_mask,
+    adjacency_from_neighbors,
+    block_spmm,
+    best_block_sizes,
+)
 from repro.kernels.spmm.ref import spmm_ref
 from repro.kernels.wkv6.ops import wkv6
 from repro.kernels.wkv6.ref import wkv6_ref
@@ -56,3 +74,104 @@ def run(quick: bool = True) -> list[dict]:
     rows.append({"kernel": "wkv6", "shape": f"B{B}T{T}H{H}N{N}",
                  "oracle_us_per_call": round(us, 1), "kernel_max_err": err})
     return rows
+
+
+# ---------------------------------------------------------------------------
+# SpMM block-size autotune (the sweep AUTOTUNE_TABLE's entries come from)
+# ---------------------------------------------------------------------------
+
+def spmm_candidates(n: int, m: int, d: int) -> list[tuple[int, int, int]]:
+    """Local search around the current choice: the table/heuristic triple
+    plus each dim halved and doubled (clamped to [8, pow2ceil(dim)] — a
+    block larger than the padded dim only buys padding waste)."""
+    dims = (_pow2ceil(n), _pow2ceil(m), _pow2ceil(d))
+    base = best_block_sizes(n, m, d)
+    cands = {base}
+    for i in range(3):
+        for v in (base[i] // 2, base[i] * 2):
+            if 8 <= v <= dims[i]:
+                c = list(base)
+                c[i] = v
+                cands.add(tuple(c))
+    return sorted(cands)
+
+
+def _spmm_problem(n: int, m: int, d: int, k: int = 8):
+    """A neighbor-aggregation-shaped problem: each of the n rows reads ~k
+    of the m table rows (the padded-neighbor-list sparsity the training and
+    serve paths feed the kernel)."""
+    rng = np.random.default_rng(n * 7 + m * 3 + d)
+    idx = jnp.asarray(rng.integers(0, m, (n, k)).astype(np.int32))
+    mask = jnp.asarray((rng.random((n, k)) < 0.75).astype(np.float32))
+    a = adjacency_from_neighbors(idx, mask, m)
+    x = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    return a, x, idx, mask
+
+
+# a table entry is "stale" only when it is measurably worse than the sweep's
+# best — interpret-mode wall clocks jitter by tens of percent run to run, so
+# a bitwise best==table gate would ping-pong on noise
+STALE_RATIO = 1.3
+
+
+def autotune_spmm(shapes=None, *, repeats: int = 2,
+                  quick: bool = True) -> list[dict]:
+    """Sweep ``spmm_candidates`` per shape; returns one row per shape with
+    every candidate's us_per_call, the winner, and the committed table
+    entry. ``quick`` skips the large eval-graph shapes (interpret mode
+    pays per grid cell; CI smoke only needs the serve/train buckets)."""
+    shapes = [tuple(s) for s in (shapes if shapes is not None
+                                 else sorted(AUTOTUNE_TABLE))]
+    if quick:
+        shapes = [s for s in shapes if s[0] * s[1] * s[2] <= 256 * 512 * 512]
+    rows = []
+    for (n, m, d) in shapes:
+        a, x, idx, mask = _spmm_problem(n, m, d)
+        timings = []
+        for (bn, bm, bd) in spmm_candidates(n, m, d):
+            grid = adjacency_block_mask(idx, mask, m, bn, bm)
+            us = timed(block_spmm, a, x, grid, block_n=bn, block_m=bm,
+                       block_d=bd, repeats=repeats)
+            timings.append({"blocks": (bn, bm, bd), "us_per_call": round(us, 1)})
+        best = min(timings, key=lambda t: t["us_per_call"])
+        rows.append({"kernel": "spmm_autotune", "shape": (n, m, d),
+                     "best": best["blocks"],
+                     "best_us_per_call": best["us_per_call"],
+                     "table": AUTOTUNE_TABLE.get((n, m, d)),
+                     "candidates": timings})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes (autotune: include the large "
+                         "eval-graph shapes)")
+    ap.add_argument("--autotune-spmm", action="store_true",
+                    help="sweep SpMM block sizes over AUTOTUNE_TABLE's "
+                         "shapes instead of running the oracle benchmarks")
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args(argv)
+    if args.autotune_spmm:
+        rows = autotune_spmm(repeats=args.repeats, quick=not args.full)
+        stale = []
+        for r in rows:
+            print(json.dumps(r))
+            if r["table"] is None or tuple(r["table"]) == r["best"]:
+                continue
+            tabled = next(t for t in r["candidates"]
+                          if t["blocks"] == tuple(r["table"]))
+            if tabled["us_per_call"] > STALE_RATIO * r["best_us_per_call"]:
+                stale.append((r, tabled))
+        for r, tabled in stale:
+            print(f"# stale: {r['shape']} table {r['table']} "
+                  f"({tabled['us_per_call']}us) vs measured best {r['best']} "
+                  f"({r['best_us_per_call']}us)")
+        return 1 if stale else 0
+    for r in run(quick=not args.full):
+        print(json.dumps(r))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

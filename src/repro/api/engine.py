@@ -108,7 +108,13 @@ from repro.federated.partition import (
 from repro.federated.quant import check_sync_dtype, quant_roundtrip
 from repro.federated.server import build_eval_graph, evaluate_global
 from repro.graph.data import GraphData
-from repro.models.gcn import HIDDEN, gcn_flops_per_node, gcn_init, gcn_param_count
+from repro.models.gcn import (
+    AGG_BACKENDS,
+    HIDDEN,
+    gcn_flops_per_node,
+    gcn_init,
+    gcn_param_count,
+)
 from repro.sharding.fed import (
     build_sharded_chunk,
     client_axis_of,
@@ -225,6 +231,7 @@ class FedEngine:
         scheduler=None,
         callbacks: Optional[Sequence] = None,
         eval_backend: str = "gather",
+        train_backend: str = "gather",
         mesh=None,
         client_sharding: str = "auto",
         table_sharding: str = "auto",
@@ -295,6 +302,14 @@ class FedEngine:
         # write-back, pod collectives) — repro.federated.quant. "fp32" is
         # bit-inert; bf16/int8 quantize the wire, accumulators stay fp32.
         self.sync_dtype = check_sync_dtype(sync_dtype)
+        # batch neighbor aggregation inside every executor's LocalUpdate
+        # (models.gcn.gcn_batch_forward backend=...): "gather" is the
+        # bit-parity default; "segment" runs the bucketed in-trace CSR and
+        # never materializes the (b, K, d) gather; "spmm" the Pallas kernel
+        if train_backend not in AGG_BACKENDS:
+            raise ValueError(f"unknown train_backend {train_backend!r}; "
+                             f"known: {AGG_BACKENDS}")
+        self.train_backend = train_backend
         self.mesh = mesh
         self.client_sharding = client_sharding
         self.table_sharding = table_sharding
@@ -350,7 +365,8 @@ class FedEngine:
         # round_step, the sharded path shard_maps it (same computation, one
         # compilation each)
         self._vm_raw = make_vmapped_update(self.mcfg, fed.n_max, fed.g_max,
-                                           self.H1, sync_dtype=self.sync_dtype)
+                                           self.H1, sync_dtype=self.sync_dtype,
+                                           train_backend=self.train_backend)
         self._vm = jax.jit(self._vm_raw)
         self._fused_chunk = None            # built lazily by run_fused
         self._sharded_chunk = None          # built lazily when mesh is set
@@ -832,7 +848,8 @@ class FedEngine:
             vm = make_vmapped_update(self.mcfg, self.fed.n_max,
                                      self.fed.g_max, self.H1,
                                      ghost_source="prefetched",
-                                     sync_dtype=self.sync_dtype)
+                                     sync_dtype=self.sync_dtype,
+                                     train_backend=self.train_backend)
             self._pod_chunk = build_pod_sharded_chunk(
                 vm, mesh, m, buckets, _LIGHT_STATS,
                 reduce=self.merge_reduce, sync_dtype=self.sync_dtype)

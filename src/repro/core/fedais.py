@@ -28,7 +28,7 @@ from repro.core.importance import (
     stable_rank,
     uniform_probs,
 )
-from repro.models.gcn import gcn_batch_forward, per_node_loss
+from repro.models.gcn import AGG_BACKENDS, gcn_batch_forward, per_node_loss
 from repro.optim import adamw_init, adamw_update
 
 
@@ -69,7 +69,8 @@ VMAP_IN_AXES_PREFETCHED = (None, 0, 0, 0, 0, 0, 0, 0, None, 0, None, 0)
 
 def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
                         *, ghost_source: str = "tables",
-                        sync_dtype: str = "fp32"):
+                        sync_dtype: str = "fp32",
+                        train_backend: str = "gather"):
     """The cohort-stacked LocalUpdate every executor vmaps over the selected
     clients — shared by the engine's stepwise/fused paths and the sharded
     round_step (repro.sharding.fed), so all of them run one computation.
@@ -78,13 +79,15 @@ def make_vmapped_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
     axes = VMAP_IN_AXES if ghost_source == "tables" else VMAP_IN_AXES_PREFETCHED
     return jax.vmap(make_local_update(mcfg, n_max, g_max, h1_dim,
                                       ghost_source=ghost_source,
-                                      sync_dtype=sync_dtype),
+                                      sync_dtype=sync_dtype,
+                                      train_backend=train_backend),
                     in_axes=axes)
 
 
 def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
                       *, ghost_source: str = "tables",
-                      sync_dtype: str = "fp32"):
+                      sync_dtype: str = "fp32",
+                      train_backend: str = "gather"):
     """Build the jit-able LocalUpdate for one client (Algorithm 1 lines 10-19).
 
     ``ghost_source`` picks where the tau-gated embedding sync reads from:
@@ -105,10 +108,21 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
     already wire-quantized (the pod executor encodes the physical
     all-to-all and the partition-time feature exchange), so this function
     applies no second round-trip. ``"fp32"`` adds zero trace ops.
+
+    ``train_backend`` selects the *batch* neighbor aggregation inside both
+    ``gcn_batch_forward`` calls (the per-epoch loss pass and the training
+    step): ``gather`` is the bit-parity default; ``segment`` derives its
+    jit-stable bucketed CSR in-trace from the sampled batch rows and never
+    materializes the (b, K, d) gather; ``spmm`` runs the Pallas kernel
+    (grads flow through its custom VJP). Allclose parity across backends is
+    pinned per method by tests/test_train_backend.py.
     """
     if ghost_source not in ("tables", "prefetched"):
         raise ValueError(f"unknown ghost_source {ghost_source!r}; "
                          "known: tables | prefetched")
+    if train_backend not in AGG_BACKENDS:
+        raise ValueError(f"unknown train_backend {train_backend!r}; "
+                         f"known: {AGG_BACKENDS}")
     check_sync_dtype(sync_dtype)
     bsz = batch_size_for(mcfg, n_max)
 
@@ -135,6 +149,7 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
         logits_all, _, _ = gcn_batch_forward(
             params, client["features"], ghost_feat, hist1,
             client["nbr_idx"], client["nbr_mask"], all_idx,
+            backend=train_backend,
         )
         loss_all = per_node_loss(logits_all, client["labels"]) * client["node_mask"]
         if mcfg.importance_sampling:
@@ -219,7 +234,8 @@ def make_local_update(mcfg: MethodConfig, n_max: int, g_max: int, h1_dim: int,
             def batch_loss(p):
                 logits, h1, _ = gcn_batch_forward(
                     p, client["features"], ghost_feat, hist1,
-                    client["nbr_idx"], client["nbr_mask"], batch_idx, nbr_keep=keep,
+                    client["nbr_idx"], client["nbr_mask"], batch_idx,
+                    nbr_keep=keep, backend=train_backend,
                 )
                 w = valid.astype(jnp.float32) * train_mask[batch_idx]
                 nll = per_node_loss(logits, client["labels"][batch_idx])

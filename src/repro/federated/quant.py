@@ -66,7 +66,12 @@ def encode(x, dtype):
         return x, None
     if dtype == "bf16":
         return x.astype(jnp.bfloat16), None
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    # degenerate shapes stay exact: a 0-d payload is its own (single) row,
+    # and a zero-width last axis reduces with initial=0 instead of erroring
+    if jnp.ndim(x) == 0:
+        amax = jnp.abs(x)
+    else:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True, initial=0.0)
     scale = (amax / 127.0).astype(jnp.float32)
     safe = jnp.where(scale > 0, scale, jnp.float32(1.0))
     q = jnp.clip(jnp.round(x / safe), -127.0, 127.0).astype(jnp.int8)
@@ -98,12 +103,17 @@ def quant_roundtrip(x, dtype):
 def wire_bytes(shape, dtype):
     """Bytes a fp32 array of ``shape`` occupies on the wire at ``dtype``.
 
-    int8 charges one fp32 scale per row (last axis = row).
+    int8 charges one fp32 scale per row, where a "row" is what ``encode``
+    actually emits a scale for: every leading-axes index (``prod(shape[:-1])``
+    — so ``(n, 0)`` still pays its n scales), and a 0-d payload is its own
+    single row. Exactness against ``encode``'s output ``nbytes`` — scalar,
+    zero-width, 1-D and n-D shapes alike — is pinned by tests/test_quant.py.
     """
     check_sync_dtype(dtype)
-    n = int(np.prod(shape)) if len(shape) else 1
+    shape = tuple(int(s) for s in shape)
+    n = int(np.prod(shape)) if shape else 1
     total = n * _ELEM_BYTES[dtype]
     if dtype == "int8":
-        rows = n // int(shape[-1]) if len(shape) and shape[-1] else 0
+        rows = int(np.prod(shape[:-1])) if shape else 1
         total += rows * 4
     return int(total)

@@ -6,6 +6,7 @@ consumes the same structure (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -31,7 +32,11 @@ def build_padded_neighbors(
         if not nbrs:
             continue
         if len(nbrs) > max_deg:
-            nbrs = rng.choice(nbrs, size=max_deg, replace=False)
+            # sort the subsample so slot order (hence csr_from_padded's edge
+            # order) is canonical for a given (adj, seed) — rng.choice
+            # returns draw order, which would leak into every downstream
+            # summation order
+            nbrs = np.sort(rng.choice(nbrs, size=max_deg, replace=False))
         idx[i, : len(nbrs)] = nbrs
         mask[i, : len(nbrs)] = 1.0
     return idx, mask
@@ -56,6 +61,38 @@ def csr_from_padded(nbr_idx: np.ndarray, nbr_mask: np.ndarray) -> dict:
         "src": idx[dst, slot].astype(np.int32),
         "dst": dst.astype(np.int32),
         "inv_deg": (1.0 / np.maximum(deg, 1)).astype(np.float32),
+    }
+
+
+def bucketed_csr_from_padded(nbr_idx, nbr_mask) -> dict:
+    """Jit-stable bucketed CSR: every (row, slot) pair becomes an edge slot.
+
+    Returns ``{"src": (E_cap,) int32, "dst": (E_cap,) int32,
+    "inv_deg": (n,) float32}`` with ``E_cap = n * K`` — a fixed shape that
+    depends only on the padded neighbor arrays, so it can be built *inside*
+    a traced computation from traced batch rows (the training hot path,
+    where ``csr_from_padded``'s dynamic E would break jit). Padding slots
+    route to an overflow segment ``n`` (src clamped to 0), so a
+    mean-aggregate is ``segment_sum(table[src], dst, n + 1)[:n]
+    * inv_deg[:, None]``.
+
+    Real edges keep ``csr_from_padded``'s row-major slot order: filtering
+    the bucketed arrays to ``dst < n`` reproduces its ``src``/``dst``
+    exactly (pinned by tests/test_csr.py), so per-segment summation order
+    — hence the float sums — match the packed form bit for bit.
+    """
+    idx = jnp.asarray(nbr_idx)
+    mask = jnp.asarray(nbr_mask)
+    n, k = idx.shape
+    real = mask > 0
+    src = jnp.where(real, idx, 0).reshape(-1).astype(jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+    dst = jnp.where(real, rows, n).reshape(-1).astype(jnp.int32)
+    deg = real.sum(-1)
+    return {
+        "src": src,
+        "dst": dst,
+        "inv_deg": (1.0 / jnp.maximum(deg, 1)).astype(jnp.float32),
     }
 
 

@@ -1,10 +1,20 @@
 """Public wrapper for the block-sparse SpMM kernel.
 
-``block_spmm(a, x)`` pads to tile multiples, computes the block mask on the
-fly (inside jit — a cheap max-reduce per tile), runs the Pallas kernel and
-slices the padding off. ``neighbor_mean`` expresses the paper's padded
-neighbor-list aggregation as an SpMM against a normalised adjacency built
-from (idx, mask) — the form the FedGCN layer uses.
+``block_spmm(a, x)`` pads to tile multiples, computes (or takes) the block
+mask, runs the Pallas kernel and slices the padding off. Block sizes
+default to an autotuned choice keyed on the (padded) problem shape — see
+``best_block_sizes`` / ``AUTOTUNE_TABLE``. ``neighbor_mean`` expresses the
+paper's padded neighbor-list aggregation as an SpMM against a normalised
+adjacency built from (idx, mask) — the form the FedGCN layer uses — and
+derives the block mask directly from the neighbor list
+(``adjacency_block_mask``), skipping the O(N·M) tile max-reduce.
+
+The wrapper carries a ``jax.custom_vjp``: gradients flow to ``x`` as
+``dx = Aᵀ @ dy`` through the same kernel (the adjacency is built from
+non-differentiable neighbor indices/masks, so its cotangent is zero by
+construction). This is what lets the ``spmm`` backend serve the *training*
+forward, where ``value_and_grad`` differentiates through the aggregation —
+Pallas interpret mode has no transpose rule of its own.
 
 ``interpret=None`` auto-detects (compiled on TPU, interpreter elsewhere).
 """
@@ -18,6 +28,50 @@ import jax.numpy as jnp
 from repro.kernels import resolve_interpret
 from repro.kernels.spmm.spmm import spmm_pallas
 
+# Autotune table: pow2-bucketed (N, M, D) -> (block_n, block_m, block_d).
+# Measured with benchmarks/kernel_bench.py --autotune-spmm (wall-clock of
+# the full block_spmm call, interpret mode on CPU; compiled TPU entries
+# must keep the lane dim a multiple of 128 — pallas_guide: fp32 min tile
+# (8, 128), MXU 128x128). Interpret mode pays per grid cell, so the best
+# blocks cover a whole padded dim where VMEM would allow it; block
+# skipping argues for smaller row/col tiles only once the adjacency is
+# sparse at tile granularity.
+AUTOTUNE_TABLE: dict[tuple[int, int, int], tuple[int, int, int]] = {
+    # eval full-graph aggregation (quick perf shape, pubmed/16)
+    (2048, 2048, 512): (256, 512, 512),
+    (2048, 2048, 256): (256, 512, 256),
+    (2048, 2048, 128): (256, 512, 128),
+    # serve buckets: (bucket, store capacity, H1/F)
+    (8, 512, 128): (8, 512, 128),
+    (32, 512, 128): (32, 512, 128),
+    (128, 512, 128): (128, 512, 128),
+    (8, 512, 512): (8, 512, 512),
+    (32, 512, 512): (32, 512, 512),
+    (128, 512, 512): (128, 512, 512),
+    # training batch aggregation: (batch_cap, n_tot, F/H1)
+    (256, 256, 512): (256, 256, 512),
+    (256, 256, 256): (256, 256, 256),
+    (128, 256, 512): (128, 256, 512),
+    (64, 128, 512): (64, 128, 512),
+}
+
+
+def _pow2ceil(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def best_block_sizes(n: int, m: int, d: int) -> tuple[int, int, int]:
+    """Block sizes for an (n, m) @ (m, d) SpMM: exact table hit on the
+    pow2-bucketed shape, else a padding-waste-minimising heuristic (cover
+    small dims with one block, cap at the MXU-friendly 128/256)."""
+    key = (_pow2ceil(n), _pow2ceil(m), _pow2ceil(d))
+    if key in AUTOTUNE_TABLE:
+        return AUTOTUNE_TABLE[key]
+    bn = min(128, key[0])
+    bm = min(128, key[1])
+    bd = min(256, key[2])
+    return bn, bm, bd
+
 
 def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
     p0 = (-x.shape[0]) % mult0
@@ -27,29 +81,69 @@ def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "block_d", "interpret"))
-def block_spmm(
-    a: jnp.ndarray,
-    x: jnp.ndarray,
-    *,
-    block_n: int = 128,
-    block_m: int = 128,
-    block_d: int = 128,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Y = A @ X via the block-skipping Pallas kernel. a (N, M), x (M, D)."""
-    interpret = resolve_interpret(interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _spmm(block_n, block_m, block_d, interpret, a, x, mask):
+    return _spmm_run(block_n, block_m, block_d, interpret, a, x, mask)
+
+
+def _spmm_run(block_n, block_m, block_d, interpret, a, x, mask):
     N, D = a.shape[0], x.shape[1]
     ap = _pad_to(a, block_n, block_m)
     xp = _pad_to(x, block_m, block_d)
-    nb_n, nb_m = ap.shape[0] // block_n, ap.shape[1] // block_m
-    tiles = ap.reshape(nb_n, block_n, nb_m, block_m)
-    mask = (jnp.abs(tiles).max(axis=(1, 3)) > 0).astype(jnp.int32)   # (nb_n, nb_m)
+    if mask is None:
+        nb_n, nb_m = ap.shape[0] // block_n, ap.shape[1] // block_m
+        tiles = ap.reshape(nb_n, block_n, nb_m, block_m)
+        mask = (jnp.abs(tiles).max(axis=(1, 3)) > 0).astype(jnp.int32)
     y = spmm_pallas(
         ap, xp, mask,
         block_n=block_n, block_m=block_m, block_d=block_d, interpret=interpret,
     )
     return y[:N, :D]
+
+
+def _spmm_fwd(block_n, block_m, block_d, interpret, a, x, mask):
+    y = _spmm_run(block_n, block_m, block_d, interpret, a, x, mask)
+    return y, (a, mask)
+
+
+def _spmm_bwd(block_n, block_m, block_d, interpret, res, dy):
+    a, mask = res
+    # dx = Aᵀ @ dy through the same kernel (transposed tiling + mask);
+    # the adjacency/mask are index-derived constants -> zero cotangents
+    mask_t = None if mask is None else mask.T
+    dx = _spmm_run(block_m, block_n, block_d, interpret, a.T, dy, mask_t)
+    return jnp.zeros_like(a), dx, (None if mask is None
+                                   else jnp.zeros_like(mask))
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "block_d",
+                                             "interpret"))
+def block_spmm(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    *,
+    block_n: int | None = None,
+    block_m: int | None = None,
+    block_d: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Y = A @ X via the block-skipping Pallas kernel. a (N, M), x (M, D).
+
+    ``mask`` is an optional precomputed (N/bn, M/bm) int32 block-liveness
+    grid (``adjacency_block_mask``); None computes it from the A tiles (a
+    max-reduce over the dense A every call). Unset block sizes come from
+    ``best_block_sizes``. Differentiable in ``x`` (see module docstring).
+    """
+    bn, bm, bd = best_block_sizes(a.shape[0], a.shape[1], x.shape[1])
+    block_n = bn if block_n is None else block_n
+    block_m = bm if block_m is None else block_m
+    block_d = bd if block_d is None else block_d
+    interpret = resolve_interpret(interpret)
+    return _spmm(block_n, block_m, block_d, interpret, a, x, mask)
 
 
 def adjacency_from_neighbors(nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -62,10 +156,41 @@ def adjacency_from_neighbors(nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, m: int
     return a.at[rows, nbr_idx].add(w)
 
 
+def adjacency_block_mask(nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, m: int,
+                         block_n: int, block_m: int) -> jnp.ndarray:
+    """Block-liveness grid of ``adjacency_from_neighbors``' (N, m) matrix,
+    scattered straight from the neighbor list in O(N·K) — equal to the
+    O(N·m) tile max-reduce ``block_spmm`` would otherwise pay, since the
+    adjacency is nonzero exactly at the real (row, nbr) edges."""
+    N, K = nbr_idx.shape
+    nb_n = -(-N // block_n)
+    nb_m = -(-m // block_m)
+    rows = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[:, None], (N, K))
+    live = (nbr_mask > 0).reshape(-1).astype(jnp.int32)
+    grid = jnp.zeros((nb_n, nb_m), jnp.int32)
+    return grid.at[(rows // block_n).reshape(-1),
+                   (nbr_idx // block_m).reshape(-1)].max(live)
+
+
+def neighbor_spmm(table: jnp.ndarray, nbr_idx: jnp.ndarray,
+                  nbr_mask: jnp.ndarray, *,
+                  adj: jnp.ndarray | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Mean-aggregate ``table`` rows for a padded neighbor batch via the
+    kernel, with the block mask derived from the neighbor list (no dense
+    tile reduce). ``adj`` optionally reuses a precomputed adjacency."""
+    m = table.shape[0]
+    if adj is None:
+        adj = adjacency_from_neighbors(nbr_idx, nbr_mask, m)
+    bn, bm, _ = best_block_sizes(adj.shape[0], m, table.shape[1])
+    mask = adjacency_block_mask(nbr_idx, nbr_mask, m, bn, bm)
+    return block_spmm(adj, table, mask, block_n=bn, block_m=bm,
+                      interpret=interpret).astype(table.dtype)
+
+
 def neighbor_mean(
     features: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray, *,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Mean-aggregate neighbor features via the SpMM kernel."""
-    a = adjacency_from_neighbors(nbr_idx, nbr_mask, features.shape[0])
-    return block_spmm(a, features, interpret=interpret).astype(features.dtype)
+    return neighbor_spmm(features, nbr_idx, nbr_mask, interpret=interpret)

@@ -21,6 +21,11 @@ bucketed query path. The ledger gains a ``cache`` column (dtype, resident
 bytes, test-split accuracy of the served logits) so BENCH_serve.json
 records accuracy next to latency for each format. ``--parity-check`` stays
 fp32-only: a quantized cache is lossy by design.
+
+Before traffic runs, the pipeline A/Bs the engine's fused single-call
+bucket path against the decomposed two-call reference (``fused=False``) on
+the same warm model and gates fused p50 <= two-call p50 with zero
+post-warmup recompiles; the result lands in the ledger's ``fused`` column.
 """
 from __future__ import annotations
 
@@ -155,6 +160,52 @@ def serve_accuracy(engine, graph) -> float:
     return float((pred[mask] == np.asarray(graph.labels)[mask]).mean())
 
 
+def fused_ab(engine, graph, seed: int, reps: int = 200) -> dict:
+    """A/B the fused single-call bucket path against the decomposed two-call
+    reference on the same warm model (smallest bucket, historical policy,
+    interleaved reps). Asserts bit-parity first, then gates fused p50 <=
+    two-call p50 with zero fused recompiles — the ``fused`` ledger column."""
+    import time
+
+    from repro.serve import QueryEngine
+
+    twin = QueryEngine(engine.model, cache_policy="historical", fused=False)
+    b = engine.buckets[0]
+    n = graph.features.shape[0]
+    rng = np.random.default_rng((seed, 0xAB))
+    ids = rng.integers(0, n, size=b).astype(np.int64)
+    # warm both paths on the bucket, then parity: both modes decode the same
+    # cache bits and sum segments in the same slot order -> bit-identical
+    want = engine.query(ids, policy="historical")
+    got = twin.query(ids, policy="historical")
+    if not np.array_equal(np.asarray(got), np.asarray(want)):
+        raise AssertionError("two-call reference logits diverge from the "
+                             "fused bucket path")
+    fused_ts, two_ts = [], []
+    for _ in range(reps):
+        qs = rng.integers(0, n, size=b).astype(np.int64)
+        t0 = time.perf_counter()
+        engine.query(qs, policy="historical")
+        fused_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        twin.query(qs, policy="historical")
+        two_ts.append(time.perf_counter() - t0)
+    p50 = float(np.median(fused_ts) * 1e3)
+    two_p50 = float(np.median(two_ts) * 1e3)
+    recompiles = engine.trace_count - engine.trace_count_after_warmup
+    col = {"bucket": int(b), "p50_ms": p50, "twocall_p50_ms": two_p50,
+           "speedup": two_p50 / p50, "recompiles_after_warmup": recompiles}
+    print(f"# fused A/B (bucket {b}, {reps} reps): fused p50={p50:.3f}ms vs "
+          f"two-call p50={two_p50:.3f}ms ({col['speedup']:.2f}x)")
+    if recompiles:
+        raise SystemExit(f"fused A/B retraced {recompiles} serve shape(s) "
+                         "after warmup")
+    if p50 > two_p50:
+        raise SystemExit(f"fused bucket path regressed: p50 {p50:.3f}ms > "
+                         f"two-call {two_p50:.3f}ms")
+    return col
+
+
 def run_pipeline(args) -> dict:
     """The full train -> checkpoint -> restore -> serve pipeline. Returns the
     validated BENCH payload (and writes it to ``args.out``)."""
@@ -198,7 +249,11 @@ def run_pipeline(args) -> dict:
     if engine.trace_count != engine.trace_count_after_warmup:
         raise AssertionError("accuracy sweep retraced a serve shape")
 
-    mix = ({"historical": 0.9, "fresh": 0.1} if args.policy == "historical"
+    # the fused-vs-two-call hot-path column, measured on the warm model
+    # before traffic mutates the graph
+    fused_col = fused_ab(engine, g, args.seed)
+
+    mix =({"historical": 0.9, "fresh": 0.1} if args.policy == "historical"
            else {"fresh": 0.9, "historical": 0.1})
     gen = LoadGenerator(engine, seed=args.seed, n_queries=args.queries,
                         n_updates=args.updates, mode=args.mode,
@@ -214,7 +269,7 @@ def run_pipeline(args) -> dict:
     payload = ledger.summary(backend=args.backend, devices=jax.device_count(),
                              quick=bool(args.quick), mode=args.mode,
                              policy_mix=mix, model_summary=model.summary(),
-                             cache=cache_col)
+                             cache=cache_col, fused=fused_col)
     problems = validate_bench_serve(payload)
     if problems:
         raise SystemExit("refusing to write invalid BENCH_serve.json:\n  "

@@ -53,36 +53,44 @@ def neighbor_aggregate(
 ) -> jnp.ndarray:
     """Mean-aggregate neighbor rows through a pluggable backend.
 
-    ``gather``   the dense (b, K, d) gather — current semantics and the
-                 bit-parity default (the training batch path uses it
-                 unconditionally: its batch shapes are dynamic).
-    ``segment``  CSR ``segment_sum`` over the E real edges — needs the
-                 precomputed ``csr`` dict from ``graph.csr.csr_from_padded``;
-                 never materializes the padded (b, K, d) gather.
+    ``gather``   the dense (b, K, d) gather — the bit-parity default.
+    ``segment``  CSR ``segment_sum`` over edge arrays. ``csr`` may be the
+                 precomputed form (``graph.csr.csr_from_padded``, eval /
+                 serve: only the E real edges) or None, in which case the
+                 jit-stable bucketed form is derived in-trace from the
+                 (possibly traced) batch rows
+                 (``graph.csr.bucketed_csr_from_padded`` — the training hot
+                 path). Either way the padded (b, K, d) gather is never
+                 materialized; the sum always runs over ``b + 1`` segments
+                 (padding slots land in the sliced-off overflow segment).
     ``spmm``     the block-sparse Pallas kernel (kernels/spmm) against a
-                 row-normalised adjacency; ``interpret`` auto-detects
-                 (compiled on TPU, interpreter elsewhere). The adjacency
-                 depends only on the static neighbor list — pass the
-                 precomputed ``adj`` (build_eval_graph does) so it is built
-                 once per graph, not per layer per call.
+                 row-normalised adjacency, block mask derived from the
+                 neighbor list; differentiable in ``table`` (custom VJP —
+                 the training path takes grads through it). ``interpret``
+                 auto-detects (compiled on TPU, interpreter elsewhere).
+                 Pass a precomputed ``adj`` (build_eval_graph does) so the
+                 adjacency is built once per graph, not per layer per call.
 
     ``segment``/``spmm`` are numerically equivalent to ``gather`` within FP
-    tolerance (different summation order), pinned by tests/test_fused.py.
+    tolerance (different summation order), pinned by tests/test_fused.py
+    and tests/test_train_backend.py.
     """
     if backend == "gather":
         return _aggregate(table, nbr_idx, nbr_mask)
     if backend == "segment":
         if csr is None:
-            raise ValueError("segment backend needs csr=csr_from_padded(...)")
-        seg = jax.ops.segment_sum(table[csr["src"]], csr["dst"],
-                                  num_segments=nbr_idx.shape[0])
-        return seg * csr["inv_deg"][:, None]
-    if backend == "spmm":
-        from repro.kernels.spmm.ops import adjacency_from_neighbors, block_spmm
+            from repro.graph.csr import bucketed_csr_from_padded
 
-        if adj is None:
-            adj = adjacency_from_neighbors(nbr_idx, nbr_mask, table.shape[0])
-        return block_spmm(adj, table, interpret=interpret).astype(table.dtype)
+            csr = bucketed_csr_from_padded(nbr_idx, nbr_mask)
+        b = nbr_idx.shape[0]
+        seg = jax.ops.segment_sum(table[csr["src"]], csr["dst"],
+                                  num_segments=b + 1)
+        return seg[:b] * csr["inv_deg"][:, None]
+    if backend == "spmm":
+        from repro.kernels.spmm.ops import neighbor_spmm
+
+        return neighbor_spmm(table, nbr_idx, nbr_mask, adj=adj,
+                             interpret=interpret)
     raise ValueError(f"unknown aggregation backend {backend!r}; known: {AGG_BACKENDS}")
 
 
@@ -101,21 +109,45 @@ def gcn_batch_forward(
     nbr_mask: jnp.ndarray,      # (n, K)
     batch_idx: jnp.ndarray,     # (b,) rows of this batch
     nbr_keep: jnp.ndarray | None = None,   # optional (b, K) extra neighbor mask
+    *,
+    backend: str = "gather",
+    interpret: bool | None = None,
 ):
-    """Returns (logits (b, C), fresh_h1 (b, H1), h2 (b, H2))."""
+    """Returns (logits (b, C), fresh_h1 (b, H1), h2 (b, H2)).
+
+    ``backend`` picks the batch neighbor aggregation (``neighbor_aggregate``):
+    the batch shapes (b, K) are static under jit even when ``batch_idx`` is
+    traced, so the segment backend's bucketed CSR and the spmm backend's
+    (b, n_tot) adjacency are derived in-trace, once, and shared by both
+    layers (layer 0's and layer 1's tables have the same row count).
+    """
     table0 = jnp.concatenate([features, ghost_feat], axis=0)
     b_idx = nbr_idx[batch_idx]
     b_mask = nbr_mask[batch_idx]
     if nbr_keep is not None:
         b_mask = b_mask * nbr_keep
 
+    csr = adj = None
+    if backend == "segment":
+        from repro.graph.csr import bucketed_csr_from_padded
+
+        csr = bucketed_csr_from_padded(b_idx, b_mask)
+    elif backend == "spmm":
+        from repro.kernels.spmm.ops import adjacency_from_neighbors
+
+        adj = adjacency_from_neighbors(b_idx, b_mask, table0.shape[0])
+
+    def agg(table):
+        return neighbor_aggregate(table, b_idx, b_mask, backend=backend,
+                                  csr=csr, adj=adj, interpret=interpret)
+
     h_self0 = features[batch_idx]
-    agg0 = _aggregate(table0, b_idx, b_mask)
+    agg0 = agg(table0)
     h1 = _sage_layer(params, 0, h_self0, agg0)                  # (b, 256)
 
     # fresh in-batch values over the historical table (stop-grad on history)
     table1 = jax.lax.stop_gradient(hist1).at[batch_idx].set(h1)
-    agg1 = _aggregate(table1, b_idx, b_mask)
+    agg1 = agg(table1)
     h2 = _sage_layer(params, 1, h1, agg1)                       # (b, 128)
 
     logits = h2 @ params["w_cls"] + params["b_cls"]

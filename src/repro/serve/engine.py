@@ -4,11 +4,17 @@ Concurrent requests are packed into padded micro-batches at a small fixed
 set of bucket shapes; every compute path (both cache policies + the
 background refresh) is jitted once per bucket during :meth:`warmup`, so no
 query ever triggers a recompile afterwards (``trace_count`` is the probe the
-tests pin). The batch adjacency is host-sliced from the ``GraphStore`` and
-lowered as padded-CSR edge arrays (``graph/csr.csr_from_padded``, padded to
-``bucket * max_deg`` with an overflow segment) so the ``segment`` backend
-never materializes the dense (b, K, d) gather; ``gather``/``spmm`` take the
-same padded rows through their ``models/gcn.neighbor_aggregate`` forms.
+tests pin).
+
+``fused`` (the default) serves each bucket as ONE aggregate→layer→logits
+XLA call whose ``segment`` operands are the jit-stable bucketed CSR derived
+*in-trace* from the padded batch rows (``graph/csr.bucketed_csr_from_padded``
+via ``models/gcn.neighbor_aggregate``) — no per-query host CSR build, no
+edge-array transfer. ``fused=False`` keeps the decomposed two-call
+reference pipeline (an aggregate call, a host hop, then a layer→logits
+call, with the batch adjacency host-lowered as padded-CSR edge arrays per
+chunk) — same numbers, measurably slower; ``launch/serve_fed`` times the
+two against each other into BENCH_serve.json's ``fused`` section.
 
 ``cache_policy`` is the paper's accuracy-vs-cost trade-off moved to
 inference time:
@@ -41,7 +47,7 @@ import numpy as np
 from repro.federated.quant import decode as quant_decode
 from repro.federated.quant import encode as quant_encode
 from repro.graph.csr import csr_from_padded
-from repro.models.gcn import _aggregate, _sage_layer
+from repro.models.gcn import _sage_layer, neighbor_aggregate
 from repro.serve.model import ServedModel
 
 CACHE_POLICIES = ("historical", "fresh")
@@ -56,7 +62,8 @@ class QueryEngine:
                  cache_policy: str = "historical",
                  deadline_ms: float | None = None,
                  max_queue: int | None = None,
-                 fallback: bool = True):
+                 fallback: bool = True,
+                 fused: bool = True):
         if cache_policy not in CACHE_POLICIES:
             raise ValueError(f"unknown cache_policy {cache_policy!r}; "
                              f"known: {CACHE_POLICIES}")
@@ -80,54 +87,106 @@ class QueryEngine:
         # (re)compiles a serve shape — the no-recompile-after-warmup probe
         self.trace_count = 0
         self.trace_count_after_warmup: int | None = None
-        self._fn_hist = jax.jit(self._hist_impl)
-        self._fn_fresh = jax.jit(self._fresh_impl)
-        self._fn_refresh = jax.jit(self._refresh_impl, donate_argnums=(2, 3))
+        self.fused = bool(fused)
+        if self.fused:
+            self._fn_hist = jax.jit(self._hist_impl)
+            self._fn_fresh = jax.jit(self._fresh_impl)
+            self._fn_refresh = jax.jit(self._refresh_impl,
+                                       donate_argnums=(2, 3))
+        else:
+            # two-call reference pipeline: aggregate, host hop, head
+            self._fn_agg_hist = jax.jit(self._agg_hist_impl)
+            self._fn_head = jax.jit(self._head_impl)
+            self._fn_embed = jax.jit(self._embed_impl)
+            self._fn_classify = jax.jit(self._classify_impl)
+            self._fn_refresh = jax.jit(self._refresh_twocall_impl,
+                                       donate_argnums=(2, 3))
 
     # ------------------------------------------------------------------
     # traced compute (one XLA program per bucket shape, cached by jit)
     # ------------------------------------------------------------------
 
-    def _agg(self, table, idx, mask, seg):
+    def _agg(self, table, idx, mask, seg=None):
         """Mean-aggregate ``table`` rows for the padded batch rows — the
         serving twin of ``models.gcn.neighbor_aggregate`` (same math per
-        backend, batch-shaped operands)."""
-        backend = self.model.backend
-        if backend == "segment":
-            b = idx.shape[0]
-            s = jax.ops.segment_sum(table[seg["src"]], seg["dst"],
-                                    num_segments=b + 1)
-            return s[:b] * seg["inv_deg"][:, None]
-        if backend == "spmm":
-            from repro.kernels.spmm.ops import adjacency_from_neighbors, block_spmm
+        backend, batch-shaped operands). ``seg=None`` (the fused path)
+        derives the segment backend's bucketed CSR in-trace; the two-call
+        path passes the host-built padded edge arrays instead. Per-segment
+        summation order is identical either way, so the logits agree bit
+        for bit."""
+        return neighbor_aggregate(table, idx, mask,
+                                  backend=self.model.backend, csr=seg)
 
-            adj = adjacency_from_neighbors(idx, mask, table.shape[0])
-            return block_spmm(adj, table).astype(table.dtype)
-        return _aggregate(table, idx, mask)
+    # -- fused: one aggregate→layer→logits body per (bucket, policy) -----
 
-    def _hist_impl(self, params, h1, h1s, qrows, b_idx, b_mask, seg):
+    def _hist_impl(self, params, h1, h1s, qrows, b_idx, b_mask):
         self.trace_count += 1
         # dequant-on-read: the cache stays resident in its wire format;
         # fp32 decode is the identity (bit-identical jaxpr to pre-codec)
         h1 = quant_decode(h1, h1s, self.model.cache_dtype)
-        agg1 = self._agg(h1, b_idx, b_mask, seg)
+        agg1 = self._agg(h1, b_idx, b_mask)
         h2 = _sage_layer(params, 1, h1[qrows], agg1)
         return h2 @ params["w_cls"] + params["b_cls"]
 
-    def _fresh_impl(self, params, feat, h1, h1s, qrows, b_idx, b_mask, seg_b,
-                    rrows, rvalid, r_idx, r_mask, seg_r):
+    def _fresh_impl(self, params, feat, h1, h1s, qrows, b_idx, b_mask,
+                    rrows, rvalid, r_idx, r_mask):
+        self.trace_count += 1
+        h1 = quant_decode(h1, h1s, self.model.cache_dtype)
+        agg0 = self._agg(feat, r_idx, r_mask)
+        h1r = _sage_layer(params, 0, feat[rrows], agg0)
+        fresh = jnp.where(rvalid[:, None] > 0, h1r, h1[rrows])
+        table1 = h1.at[rrows].set(fresh)
+        agg1 = self._agg(table1, b_idx, b_mask)
+        h2 = _sage_layer(params, 1, table1[qrows], agg1)
+        return h2 @ params["w_cls"] + params["b_cls"]
+
+    def _refresh_impl(self, params, feat, h1, h1s, rrows, rvalid, r_idx,
+                      r_mask):
+        self.trace_count += 1
+        dt = self.model.cache_dtype
+        agg0 = self._agg(feat, r_idx, r_mask)
+        h1r = _sage_layer(params, 0, feat[rrows], agg0)
+        if dt == "fp32":
+            return (h1.at[rrows].set(
+                jnp.where(rvalid[:, None] > 0, h1r, h1[rrows])), h1s)
+        # quantized cache: encode only the refreshed rows and scatter
+        # payload + scale — untouched rows keep their exact stored bits
+        qf, sf = quant_encode(h1r, dt)
+        h1 = h1.at[rrows].set(jnp.where(rvalid[:, None] > 0, qf, h1[rrows]))
+        if sf is not None:
+            h1s = h1s.at[rrows].set(
+                jnp.where(rvalid[:, None] > 0, sf, h1s[rrows]))
+        return h1, h1s
+
+    # -- two-call reference: aggregate call, host hop, head call ---------
+
+    def _agg_hist_impl(self, h1, h1s, qrows, b_idx, b_mask, seg):
+        self.trace_count += 1
+        h1 = quant_decode(h1, h1s, self.model.cache_dtype)
+        return h1[qrows], self._agg(h1, b_idx, b_mask, seg)
+
+    def _head_impl(self, params, h1q, agg1):
+        self.trace_count += 1
+        h2 = _sage_layer(params, 1, h1q, agg1)
+        return h2 @ params["w_cls"] + params["b_cls"]
+
+    def _embed_impl(self, params, feat, h1, h1s, rrows, rvalid, r_idx,
+                    r_mask, seg_r):
         self.trace_count += 1
         h1 = quant_decode(h1, h1s, self.model.cache_dtype)
         agg0 = self._agg(feat, r_idx, r_mask, seg_r)
         h1r = _sage_layer(params, 0, feat[rrows], agg0)
         fresh = jnp.where(rvalid[:, None] > 0, h1r, h1[rrows])
-        table1 = h1.at[rrows].set(fresh)
+        return h1.at[rrows].set(fresh)
+
+    def _classify_impl(self, params, table1, qrows, b_idx, b_mask, seg_b):
+        self.trace_count += 1
         agg1 = self._agg(table1, b_idx, b_mask, seg_b)
         h2 = _sage_layer(params, 1, table1[qrows], agg1)
         return h2 @ params["w_cls"] + params["b_cls"]
 
-    def _refresh_impl(self, params, feat, h1, h1s, rrows, rvalid, r_idx,
-                      r_mask, seg):
+    def _refresh_twocall_impl(self, params, feat, h1, h1s, rrows, rvalid,
+                              r_idx, r_mask, seg):
         self.trace_count += 1
         dt = self.model.cache_dtype
         agg0 = self._agg(feat, r_idx, r_mask, seg)
@@ -135,8 +194,6 @@ class QueryEngine:
         if dt == "fp32":
             return (h1.at[rrows].set(
                 jnp.where(rvalid[:, None] > 0, h1r, h1[rrows])), h1s)
-        # quantized cache: encode only the refreshed rows and scatter
-        # payload + scale — untouched rows keep their exact stored bits
         qf, sf = quant_encode(h1r, dt)
         h1 = h1.at[rrows].set(jnp.where(rvalid[:, None] > 0, qf, h1[rrows]))
         if sf is not None:
@@ -157,8 +214,10 @@ class QueryEngine:
     def _seg_operands(self, idx: np.ndarray, mask: np.ndarray) -> dict | None:
         """Padded-CSR edge arrays for the batch rows, fixed-shape per bucket:
         real edges from ``csr_from_padded``, padding routed to an overflow
-        segment the traced compute slices off."""
-        if self.model.backend != "segment":
+        segment the traced compute slices off. Two-call mode only — the
+        fused bodies derive the same operands in-trace, skipping this host
+        build and its device transfer entirely."""
+        if self.fused or self.model.backend != "segment":
             return None
         b = idx.shape[0]
         e_cap = b * idx.shape[1]
@@ -169,6 +228,17 @@ class QueryEngine:
         dst = np.full(e_cap, b, np.int32)
         dst[:e] = c["dst"]
         return {"src": src, "dst": dst, "inv_deg": c["inv_deg"]}
+
+    def _refresh_call(self, rrows, rvalid, r_idx, r_mask):
+        """Dispatch the background-refresh body for the active mode."""
+        model = self.model
+        if self.fused:
+            return self._fn_refresh(model.params, model.feat, model.h1,
+                                    model.h1_scale, rrows, rvalid, r_idx,
+                                    r_mask)
+        return self._fn_refresh(model.params, model.feat, model.h1,
+                                model.h1_scale, rrows, rvalid, r_idx, r_mask,
+                                self._seg_operands(r_idx, r_mask))
 
     def _pad_rows(self, rows: np.ndarray, cap: int):
         padded = np.zeros(cap, np.int32)
@@ -199,10 +269,16 @@ class QueryEngine:
             r_idx, r_mask = store.neighbors(rrows)
             seg_r = self._seg_operands(r_idx, r_mask)
             try:
-                logits = np.asarray(self._fn_fresh(
-                    model.params, model.feat, model.h1, model.h1_scale, q,
-                    b_idx, b_mask, seg_b, rrows, rvalid, r_idx, r_mask,
-                    seg_r))
+                if self.fused:
+                    logits = np.asarray(self._fn_fresh(
+                        model.params, model.feat, model.h1, model.h1_scale,
+                        q, b_idx, b_mask, rrows, rvalid, r_idx, r_mask))
+                else:
+                    table1 = self._fn_embed(
+                        model.params, model.feat, model.h1, model.h1_scale,
+                        rrows, rvalid, r_idx, r_mask, seg_r)
+                    logits = np.asarray(self._fn_classify(
+                        model.params, table1, q, b_idx, b_mask, seg_b))
                 if self.fallback and not np.isfinite(logits[:n]).all():
                     raise ArithmeticError("non-finite fresh logits")
             except Exception:
@@ -214,8 +290,13 @@ class QueryEngine:
                 fell_back = True
                 policy = "historical"
         if policy == "historical":
-            logits = self._fn_hist(model.params, model.h1, model.h1_scale, q,
-                                   b_idx, b_mask, seg_b)
+            if self.fused:
+                logits = self._fn_hist(model.params, model.h1,
+                                       model.h1_scale, q, b_idx, b_mask)
+            else:
+                h1q, agg1 = self._fn_agg_hist(model.h1, model.h1_scale, q,
+                                              b_idx, b_mask, seg_b)
+                logits = self._fn_head(model.params, h1q, agg1)
         info = {"bucket": b, "real": n, "touched": len(touched),
                 "hit_rate": hit_rate, "policy": policy, "fell_back": fell_back}
         return np.asarray(logits)[:n], info
@@ -237,10 +318,8 @@ class QueryEngine:
             rrows = np.zeros(b, np.int32)
             rvalid = np.zeros(b, np.float32)
             r_idx, r_mask = model.store.neighbors(rrows)
-            model.h1, model.h1_scale = self._fn_refresh(
-                model.params, model.feat, model.h1, model.h1_scale,
-                rrows, rvalid, r_idx, r_mask,
-                self._seg_operands(r_idx, r_mask))
+            model.h1, model.h1_scale = self._refresh_call(
+                rrows, rvalid, r_idx, r_mask)
         self.trace_count_after_warmup = self.trace_count
         return self.trace_count
 
@@ -355,10 +434,8 @@ class QueryEngine:
             b = self._bucket_for(len(chunk))
             rrows, rvalid = self._pad_rows(chunk, b)
             r_idx, r_mask = model.store.neighbors(rrows)
-            seg = self._seg_operands(r_idx, r_mask)
-            model.h1, model.h1_scale = self._fn_refresh(
-                model.params, model.feat, model.h1, model.h1_scale,
-                rrows, rvalid, r_idx, r_mask, seg)
+            model.h1, model.h1_scale = self._refresh_call(
+                rrows, rvalid, r_idx, r_mask)
             model.mark_written(chunk)
             total += len(chunk)
         return total

@@ -39,6 +39,12 @@ _BUCKET_KEYS = ("bucket", "n", "p50_ms", "p99_ms")
 # optional in ad-hoc ledgers, but the committed BENCH_serve.json carries it
 # (tests/test_bench_schema.py pins that)
 _CACHE_KEYS = ("cache_dtype", "resident_bytes", "serve_accuracy")
+# the fused-vs-two-call hot-path column (launch.serve_fed measures both
+# engine modes on the same warm model): optional in ad-hoc ledgers, the
+# committed BENCH_serve.json carries it, and the pipeline gates
+# p50_ms <= twocall_p50_ms with zero post-warmup recompiles
+_FUSED_KEYS = ("bucket", "p50_ms", "twocall_p50_ms", "speedup",
+               "recompiles_after_warmup")
 
 
 def _pctl(xs, q: float) -> float:
@@ -131,6 +137,23 @@ def validate_bench_serve(payload) -> list[str]:
             if not isinstance(acc, (int, float)) or not 0.0 <= acc <= 1.0:
                 errs.append(f"cache.serve_accuracy must be in [0, 1], "
                             f"got {acc!r}")
+    fused = payload.get("fused")
+    if fused is not None:
+        if not isinstance(fused, dict) or any(k not in fused
+                                              for k in _FUSED_KEYS):
+            errs.append(f"fused column missing keys (need {_FUSED_KEYS})")
+        else:
+            if not isinstance(fused["bucket"], int) or fused["bucket"] < 1:
+                errs.append(f"fused.bucket must be a positive int, "
+                            f"got {fused['bucket']!r}")
+            for k in ("p50_ms", "twocall_p50_ms", "speedup"):
+                v = fused[k]
+                if not isinstance(v, (int, float)) or not v > 0:
+                    errs.append(f"fused.{k} must be positive, got {v!r}")
+            rc = fused["recompiles_after_warmup"]
+            if not isinstance(rc, int) or rc < 0:
+                errs.append(f"fused.recompiles_after_warmup must be a "
+                            f"non-negative int, got {rc!r}")
     return errs
 
 
@@ -178,7 +201,8 @@ class LatencyLedger:
     def summary(self, *, backend: str, devices: int, quick: bool, mode: str,
                 policy_mix: dict, model_summary: dict | None = None,
                 degraded: dict | None = None,
-                cache: dict | None = None) -> dict:
+                cache: dict | None = None,
+                fused: dict | None = None) -> dict:
         lat = [q.latency_ms for q in self.queries]
         by_bucket: dict[int, list] = {}
         by_policy: dict[str, list] = {}
@@ -223,6 +247,10 @@ class LatencyLedger:
             # the accuracy-vs-latency column: which wire format the h1
             # cache is resident in, what it costs, what accuracy it serves
             payload["cache"] = dict(cache)
+        if fused is not None:
+            # the fused-vs-two-call hot-path A/B (launch.serve_fed measures
+            # both engine modes on the same warm model + bucket)
+            payload["fused"] = dict(fused)
         if degraded is not None or self.rejects:
             # engine degradation counters + the requests this ledger shed
             payload["degraded"] = {"n_shed": self.rejects, **(degraded or {})}
@@ -243,6 +271,7 @@ class LoadGenerator:
         if mode not in LOAD_MODES:
             raise ValueError(f"unknown mode {mode!r}; known: {LOAD_MODES}")
         self.engine = engine
+        self.seed = int(seed)
         self.rng = np.random.default_rng(seed)
         self.n_queries = int(n_queries)
         self.n_updates = int(n_updates)
@@ -264,9 +293,16 @@ class LoadGenerator:
         """Zipf-popular node ids over the live rows (heavy-traffic skew)."""
         n_active = self.engine.model.n_active
         ranks = np.minimum(self.rng.zipf(self.zipf_a, size=n), n_active) - 1
-        # a fixed permutation decouples popularity rank from node id
+        # a fixed permutation decouples popularity rank from node id; it is
+        # derived from this generator's own seed (salted so it does not
+        # mirror any other seed-keyed stream) rather than a hard-coded
+        # constant, so differently-seeded generators hammer different hot
+        # sets — and it deliberately does NOT consume from self.rng, which
+        # would shift every later arrival/policy draw whenever n_active
+        # grows past a re-derivation
         if getattr(self, "_perm_n", None) != n_active:
-            self._perm = np.random.default_rng(12345).permutation(n_active)
+            self._perm = np.random.default_rng(
+                (self.seed, 12345)).permutation(n_active)
             self._perm_n = n_active
         return self._perm[ranks]
 

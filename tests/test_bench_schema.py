@@ -117,6 +117,49 @@ def test_validator_is_pure():
     assert p == snapshot
 
 
+def train_rows():
+    return [
+        {"variant": "train_segment", "rounds": 20, "rounds_per_s": 11.0,
+         "ms_per_round": 90.9, "speedup_vs_gather": 1.05},
+        {"variant": "train_spmm", "rounds": 2, "rounds_per_s": 0.2,
+         "ms_per_round": 5000.0},
+    ]
+
+
+def test_train_backend_rows_validate():
+    p = good_payload()
+    p["rows"] += train_rows()
+    assert validate_bench_round(p) == []
+
+
+def test_train_backend_row_errors():
+    # train_segment without its gate input (the speedup-vs-gather column)
+    p = good_payload()
+    p["rows"] += train_rows()
+    del p["rows"][-2]["speedup_vs_gather"]
+    assert any("speedup_vs_gather" in e for e in validate_bench_round(p))
+    p = good_payload()
+    p["rows"] += train_rows()
+    p["rows"][-2]["speedup_vs_gather"] = 0.0
+    assert any("speedup_vs_gather" in e for e in validate_bench_round(p))
+    # nulled throughput on either training row
+    for i in (-2, -1):
+        p = good_payload()
+        p["rows"] += train_rows()
+        p["rows"][i]["rounds_per_s"] = None
+        assert any("rounds_per_s" in e for e in validate_bench_round(p)), i
+
+
+def test_checked_in_bench_round_carries_train_segment():
+    """The committed ledger must keep the gated training-backend row — the
+    CI perf-smoke gate reads its speedup_vs_gather column."""
+    with open(os.path.join(REPO_ROOT, "BENCH_round.json")) as f:
+        rows = [r for r in json.load(f)["rows"]
+                if r.get("variant") == "train_segment"]
+    assert rows, "BENCH_round.json lost its train_segment row"
+    assert rows[0]["speedup_vs_gather"] > 0
+
+
 # ---------------------------------------------------------------------------
 # BENCH_serve.json schema guard (repro.serve.loadgen.validate_bench_serve)
 # ---------------------------------------------------------------------------

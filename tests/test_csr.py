@@ -75,6 +75,48 @@ def test_degree_cap_subsamples_without_replacement():
     row = idx[0][mask[0] > 0]
     assert len(row) == 4 == len(set(row.tolist()))       # no duplicates
     assert set(row.tolist()) <= set(range(1, 11))
+    # subsampled rows come out SORTED, so the padded form (and every CSR
+    # derived from it) is canonical: which neighbors survive depends on the
+    # seed, but never the order the rng happened to draw them in
+    assert row.tolist() == sorted(row.tolist())
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_bucketed_csr_roundtrips_padded_form(data):
+    """Property: the jit-stable (n*K,)-slot bucketed CSR is csr_from_padded
+    plus inert padding — dropping the slots routed to the overflow segment
+    reproduces csr_from_padded's src/dst arrays EXACTLY (same edges, same
+    row-major order, so the same per-segment float summation order),
+    inv_deg matches bitwise, and every padding slot is (src=0, dst=n)."""
+    from repro.graph.csr import bucketed_csr_from_padded
+
+    n = data.draw(st.integers(1, 12), label="n")
+    d = data.draw(st.integers(1, 5), label="max_deg")
+    adj = [
+        data.draw(st.lists(st.integers(0, n - 1), min_size=0, max_size=d,
+                           unique=True), label=f"adj[{i}]")
+        for i in range(n)
+    ]
+    idx, mask = build_padded_neighbors(adj, max_deg=d)
+    c = csr_from_padded(idx, mask)
+    bc = {k: np.asarray(v) for k, v in
+          bucketed_csr_from_padded(idx, mask).items()}
+    assert bc["src"].shape == bc["dst"].shape == (n * d,)
+    real = bc["dst"] < n
+    assert np.array_equal(bc["src"][real], c["src"])
+    assert np.array_equal(bc["dst"][real], c["dst"])
+    assert np.array_equal(bc["inv_deg"], c["inv_deg"])
+    assert (bc["src"][~real] == 0).all() and (bc["dst"][~real] == n).all()
+    # and the overflow segment is sliced off: the bucketed segment mean
+    # equals the packed-CSR segment mean bit for bit
+    feats = np.random.default_rng(n * 17 + d).standard_normal(
+        (n, 6)).astype(np.float32)
+    want = segment_mean(feats, c, n)
+    got = np.zeros((n + 1, 6), np.float32)
+    np.add.at(got, bc["dst"], feats[bc["src"]])
+    assert np.array_equal(got[:n] * bc["inv_deg"][:, None], want)
 
 
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")

@@ -185,14 +185,26 @@ def test_backend_equivalence_random_padded(n, k, d):
                                atol=1e-5, rtol=1e-5)
 
 
-def test_backend_requires_csr_and_rejects_unknown():
-    t = jnp.zeros((4, 2))
-    idx = jnp.zeros((4, 3), jnp.int32)
-    mask = jnp.ones((4, 3), jnp.float32)
-    with pytest.raises(ValueError, match="segment backend needs"):
-        neighbor_aggregate(t, idx, mask, backend="segment")
+def test_segment_derives_csr_in_trace_and_rejects_unknown():
+    """``backend="segment"`` with ``csr=None`` no longer raises: the
+    jit-stable bucketed CSR is derived in-trace from the padded batch (the
+    training hot path) and sums segments in the same slot order as the
+    host-precomputed form — bit-identical, and allclose to gather."""
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, 24, (24, 5)).astype(np.int32)
+    mask = (rng.random((24, 5)) < 0.6).astype(np.float32)
+    t = jnp.asarray(rng.standard_normal((24, 6)).astype(np.float32))
+    idx_j, mask_j = jnp.asarray(idx), jnp.asarray(mask)
+    want = neighbor_aggregate(t, idx_j, mask_j)
+    got = jax.jit(
+        lambda *a: neighbor_aggregate(*a, backend="segment"))(t, idx_j, mask_j)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+    csr = {k: jnp.asarray(v) for k, v in csr_from_padded(idx, mask).items()}
+    pre = neighbor_aggregate(t, idx_j, mask_j, backend="segment", csr=csr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(pre))
     with pytest.raises(ValueError, match="unknown aggregation backend"):
-        neighbor_aggregate(t, idx, mask, backend="dense")
+        neighbor_aggregate(t, idx_j, mask_j, backend="dense")
 
 
 def test_eval_backends_agree_on_real_graph(small_fed):

@@ -94,6 +94,21 @@ def test_wire_bytes_per_dtype():
     assert wide > 3.99 and narrow == 2.0
 
 
+def test_wire_bytes_degenerate_shapes_match_encode(rng):
+    """wire_bytes must equal the bytes encode actually emits — including
+    the shapes that used to mis-account: scalars (one row, one scale),
+    1-D rows (one scale, not zero), and zero-width rows ((n, 0) still pays
+    its n scales because the keepdims amax reduce emits an (n, 1) scale)."""
+    for shape in ((), (1,), (8,), (0,), (3, 0), (0, 5), (4, 8), (2, 3, 5)):
+        x = jnp.asarray(np.asarray(rng.standard_normal(shape), np.float32))
+        for d in SYNC_DTYPES:
+            payload, scale = encode(x, d)
+            nbytes = payload.nbytes + (0 if scale is None else scale.nbytes)
+            assert wire_bytes(shape, d) == nbytes, (shape, d)
+            out = decode(payload, scale, d)
+            assert jnp.shape(out) == shape, (shape, d)
+
+
 def test_wire_bytes_monotone_and_positive():
     # rows of >=4 elements: below that, int8's 4 B/row scale tax can cost
     # more than the narrowing saves (a (1, 1) row is 5 B int8 vs 4 B fp32)

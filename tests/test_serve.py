@@ -547,3 +547,105 @@ def test_loadgen_shed_counters_ride_the_payload(trained):
     assert payload["degraded"]["n_rejected"] == engine.n_rejected
     # served + shed accounts for every generated query
     assert sum(b["n"] for b in payload["buckets"]) + ledger.rejects == 24
+
+
+# ---------------------------------------------------------------------------
+# fused single-call bucket path vs the decomposed two-call reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["segment", "gather"])
+def test_twocall_reference_matches_fused_bitwise(trained, backend):
+    """``fused=False`` keeps the decomposed aggregate-call/host-hop/head-call
+    pipeline; both modes decode the same cache bits and sum segments in the
+    same slot order, so the served logits agree bit for bit under either
+    policy — the invariant that makes launch.serve_fed's fused A/B a pure
+    latency comparison. The fused warmup compiles 3 programs per bucket
+    (hist, fresh, refresh); the two-call reference pays 5."""
+    model, fused = restore_engine(trained, backend=backend)
+    fused.warmup()
+    two = QueryEngine(model, fused=False)
+    two.warmup()
+    assert fused.trace_count_after_warmup == 3 * len(fused.buckets)
+    assert two.trace_count_after_warmup == 5 * len(two.buckets)
+    rng = np.random.default_rng(7)
+    n = model.n_active
+    for size in (1, 8, 33, 128):
+        ids = rng.integers(0, n, size=size)
+        for policy in ("historical", "fresh"):
+            assert np.array_equal(fused.query(ids, policy=policy),
+                                  two.query(ids, policy=policy)), \
+                f"{backend}/{policy}/size={size}"
+    # both modes served every mix recompile-free
+    assert fused.trace_count == fused.trace_count_after_warmup
+    assert two.trace_count == two.trace_count_after_warmup
+
+
+def test_twocall_refresh_matches_fused_bitwise(trained):
+    """The background refresh writes the same rows either way: invalidate a
+    few rows, refresh through each mode from the same snapshot, compare the
+    resulting caches bitwise."""
+    import jax.numpy as jnp
+
+    model, fused = restore_engine(trained)
+    fused.warmup()
+    two = QueryEngine(model, fused=False)
+    two.warmup()
+    snap_h1 = jnp.array(model.h1)
+    model.invalidate(np.arange(5))
+    fused.refresh()
+    want = np.asarray(model.h1)
+    model.h1 = snap_h1
+    model.invalidate(np.arange(5))
+    two.refresh()
+    assert np.array_equal(np.asarray(model.h1), want)
+
+
+def test_loadgen_hot_set_diverges_across_seeds(trained):
+    """The Zipf popularity permutation derives from the generator's own
+    seed: differently-seeded generators hammer different hot sets (the old
+    code hard-coded rng(12345), so every generator shared one), equal seeds
+    reproduce the same hot set, and deriving the permutation does not
+    consume from the arrival/policy stream."""
+    from repro.serve import LoadGenerator
+
+    model, engine = restore_engine(trained)
+    engine.warmup()
+    g0 = LoadGenerator(engine, seed=0)
+    g0b = LoadGenerator(engine, seed=0)
+    g1 = LoadGenerator(engine, seed=1)
+    ids0 = g0._node_ids(4096)
+    assert np.array_equal(ids0, g0b._node_ids(4096))
+    g1._node_ids(1)
+    assert not np.array_equal(g0._perm, g1._perm)
+    # the permutation comes from a salted fork, not from self.rng: two
+    # same-seeded generators stay in rng lockstep even when only one of
+    # them re-derives its permutation an extra time
+    g0._perm_n = None
+    g0._node_ids(1)
+    g0b._node_ids(1)
+    assert np.array_equal(g0._perm, g0b._perm)
+    assert int(g0.rng.integers(1 << 30)) == int(g0b.rng.integers(1 << 30))
+
+
+def test_bench_serve_fused_column_validates(trained):
+    from repro.serve import LoadGenerator, validate_bench_serve
+
+    model, engine = restore_engine(trained)
+    gen = LoadGenerator(engine, seed=0, n_queries=8, n_updates=0,
+                        mode="closed", concurrency=2)
+    ledger = gen.run()
+    col = {"bucket": 8, "p50_ms": 0.5, "twocall_p50_ms": 0.7,
+           "speedup": 1.4, "recompiles_after_warmup": 0}
+    payload = ledger.summary(backend=model.backend, devices=1, quick=True,
+                             mode="closed", policy_mix=gen.policy_mix,
+                             fused=col)
+    assert validate_bench_serve(payload) == []
+    assert payload["fused"] == col
+    # and the validator rejects malformed fused columns
+    for broken in ({"bucket": 8},
+                   {**col, "p50_ms": -1.0},
+                   {**col, "bucket": 0},
+                   {**col, "recompiles_after_warmup": -1}):
+        bad = dict(payload)
+        bad["fused"] = broken
+        assert validate_bench_serve(bad), broken
